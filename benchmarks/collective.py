@@ -1,0 +1,80 @@
+"""Paper Fig 5 (aggregation) + Fig 7 (broadcast).
+
+Measured on virtual devices (2..8 ranks x {8 B, 8 KB, 8 MB} per-process):
+  * agg:   tree_agg (paper Fig 4 two-level binary gather)  vs  native
+           all-gather (the mpi4py analogue);
+  * bcast: serialized (paper 'initial'), binary-tree (paper 'optimized'),
+           native replication.
+
+Modeled to 256/512/768 ranks via the two-level cost model (rounds x
+bytes / per-level bandwidth) — the paper's sweep reaches 768 ranks and
+this container has 8 useful virtual devices, so large scales are modeled
+exactly the way §Roofline models collectives.
+"""
+import os
+
+if __name__ == "__main__" and "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import jax
+import jax.numpy as jnp
+from jax import lax, shard_map
+from jax.sharding import PartitionSpec as P
+
+from benchmarks.common import DCI_BW, ICI_BW, row, time_fn
+from repro.core import collectives as coll
+from repro.core import topology
+
+SIZES = [8, 8 * 1024, 8 * 1024 * 1024]
+
+
+def bench_ranks(n: int) -> None:
+    mesh = jax.make_mesh((n,), ("r",))
+
+    def sm(body):
+        return jax.jit(shard_map(body, mesh=mesh, in_specs=(P("r"),),
+                                 out_specs=P("r"), check_vma=False))
+
+    for size in SIZES:
+        elems = max(size // 4, 1)
+        x = jnp.ones((n, elems), jnp.float32)
+
+        agg_tree = sm(lambda a: coll.tree_gather_axis(a, "r")
+                      .reshape(1, -1).mean(1, keepdims=True))
+        agg_native = sm(lambda a: lax.all_gather(a, "r", axis=0, tiled=True)
+                        .reshape(1, -1).mean(1, keepdims=True))
+        bc_tree = sm(lambda a: coll.tree_bcast_axis(a, "r"))
+        bc_serial = sm(lambda a: coll.serial_bcast_axis(a, "r"))
+
+        row(f"agg_tree_r{n}_{size}B", time_fn(agg_tree, x))
+        row(f"agg_native_r{n}_{size}B", time_fn(agg_native, x))
+        row(f"bcast_tree_r{n}_{size}B", time_fn(bc_tree, x))
+        row(f"bcast_serial_r{n}_{size}B", time_fn(bc_serial, x))
+
+
+def modeled() -> None:
+    """Fig 7 extension: two-level model at pod scale (in-pod 256 ranks on
+    ICI, cross-pod on DCI)."""
+    for total in (64, 256, 512, 768):
+        n_local = min(total, 256)
+        n_global = max(total // 256, 1)
+        for size in SIZES:
+            t_tree = topology.two_level_cost(n_local, n_global, size,
+                                             ICI_BW, DCI_BW, tree=True)
+            t_serial = topology.two_level_cost(n_local, n_global, size,
+                                               ICI_BW, DCI_BW, tree=False)
+            row(f"bcast_model_tree_r{total}_{size}B", t_tree * 1e6,
+                f"speedup={t_serial / max(t_tree, 1e-12):.1f}x")
+            row(f"bcast_model_serial_r{total}_{size}B", t_serial * 1e6)
+
+
+def main() -> None:
+    n_dev = len(jax.devices())
+    for n in (2, 4, 8):
+        if n <= n_dev:
+            bench_ranks(n)
+    modeled()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""HPCC-heritage STREAM triad (the paper's earlier study [29] used the
+HPC Challenge suite; we keep the local-bandwidth anchor): a = b + s*c."""
+import os
+
+if __name__ == "__main__" and "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=1"
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row, time_fn
+
+
+def main() -> None:
+    for n in (1 << 20, 1 << 24):
+        b = jnp.ones((n,), jnp.float32)
+        c = jnp.ones((n,), jnp.float32)
+
+        @jax.jit
+        def triad(b, c):
+            return b + 3.0 * c
+
+        us = time_fn(triad, b, c)
+        gb = 3 * 4 * n / (us * 1e-6) / 1e9
+        row(f"stream_triad_{n}", us, f"{gb:.2f}GB/s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Quick CPU smoke: every arch, reduced config: train loss + prefill + decode."""
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_config, list_configs, reduced
+from repro.launch.mesh import make_local_mesh
+from repro.models.model import Model
+
+ARCHS = [a for a in list_configs()]
+
+
+def run_one(name: str) -> None:
+    cfg = reduced(get_config(name))
+    mesh = make_local_mesh(1, 1)
+    model = Model(cfg, mesh, q_chunk=8)
+    key = jax.random.PRNGKey(0)
+    params = model.init(key)
+    n_leaves = len(jax.tree.leaves(params))
+    B, S = 2, 16
+    batch = {
+        "tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size),
+        "labels": jax.random.randint(key, (B, S), 0, cfg.vocab_size),
+    }
+    if cfg.num_image_tokens:
+        batch["image_embeds"] = jnp.ones(
+            (B, cfg.num_image_tokens, cfg.d_model), jnp.bfloat16)
+    if cfg.encoder_layers:
+        batch["src_embeds"] = jnp.ones(
+            (B, cfg.src_seq_len, cfg.d_model), jnp.bfloat16)
+    loss, metrics = jax.jit(model.train_loss)(params, batch)
+    assert jnp.isfinite(loss), (name, loss)
+
+    extras = {k: v for k, v in batch.items() if k.endswith("_embeds")}
+    logits, cache = jax.jit(model.prefill)(params, batch["tokens"], extras)
+    assert jnp.isfinite(logits).all(), name
+    tok = batch["tokens"][:, :1]
+    pos = jnp.full((B,), S, jnp.int32)
+    lg2, cache2 = jax.jit(model.decode_step)(params, tok, pos, cache)
+    assert lg2.shape == (B, 1, cfg.vocab_size), (name, lg2.shape)
+    assert jnp.isfinite(lg2).all(), name
+    print(f"OK {name:28s} loss={float(loss):8.4f} leaves={n_leaves}")
+
+
+if __name__ == "__main__":
+    names = sys.argv[1:] or ARCHS
+    failures = []
+    for n in names:
+        try:
+            run_one(n)
+        except Exception as e:  # noqa: BLE001
+            failures.append((n, repr(e)[:400]))
+            print(f"FAIL {n}: {repr(e)[:400]}")
+    sys.exit(1 if failures else 0)

@@ -1,0 +1,176 @@
+"""File-based sharded checkpointing with atomic commit and async writes.
+
+This is where pPython's file-based-messaging heritage lives on in the
+TPU adaptation (DESIGN.md §2): durable, one-sided, filesystem-mediated
+state exchange — used for checkpoint/restart, elastic re-meshing, and
+cross-job handoff, with exactly the paper's virtues (no extra ports or
+services; security = filesystem permissions; message size bounded only
+by disk).
+
+Layout:
+    <dir>/step_<N>.tmp/...      (in-progress write)
+    <dir>/step_<N>/manifest.json + leaf_<i>.npy [+ .shard_<host>]
+    <dir>/LATEST                (atomic pointer file)
+
+Writes go leaf-by-leaf to the .tmp directory and are committed by a
+single atomic rename + LATEST update, so a crash mid-write can never
+leave a checkpoint that restore() would consider valid — the paper's
+one-sided-send discipline applied to state files.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _leaf_paths(tree) -> Tuple[list, Any]:
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+class _Tagged:
+    """Host snapshot of a leaf: numpy buffer + original dtype tag."""
+    __slots__ = ("arr", "tag")
+
+    def __init__(self, arr: np.ndarray, tag: str):
+        self.arr, self.tag = arr, tag
+
+
+def _to_host(leaf) -> Tuple[np.ndarray, str]:
+    """Host numpy copy + dtype tag (bf16 stored as f32 on disk)."""
+    if isinstance(leaf, _Tagged):
+        return leaf.arr, leaf.tag
+    if isinstance(leaf, np.ndarray):
+        return leaf, str(leaf.dtype)
+    x = jax.numpy.asarray(leaf)
+    if str(x.dtype) == "bfloat16":
+        return np.asarray(jax.device_get(x.astype(jax.numpy.float32))), \
+            "bfloat16"
+    return np.asarray(jax.device_get(x)), str(x.dtype)
+
+
+def save(ckpt_dir: str, step: int, tree, *, process_index: int = 0,
+         keep_last: int = 3) -> str:
+    """Synchronous sharded save with atomic commit."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + f".tmp{process_index}"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    leaves, treedef = _leaf_paths(tree)
+    manifest = {"step": step, "n_leaves": len(leaves),
+                "treedef": str(treedef),
+                "dtypes": [], "shapes": []}
+    for i, leaf in enumerate(leaves):
+        arr, tag = _to_host(leaf)
+        manifest["dtypes"].append(tag)
+        manifest["shapes"].append(list(arr.shape))
+        np.save(os.path.join(tmp, f"leaf_{i}.npy"), arr)
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)                       # atomic commit
+    latest_tmp = os.path.join(ckpt_dir, f".LATEST.tmp{process_index}")
+    with open(latest_tmp, "w") as f:
+        f.write(str(step))
+    os.replace(latest_tmp, os.path.join(ckpt_dir, "LATEST"))
+    _gc(ckpt_dir, keep_last)
+    return final
+
+
+def _gc(ckpt_dir: str, keep_last: int) -> None:
+    steps = sorted(all_steps(ckpt_dir))
+    for s in steps[:-keep_last]:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"),
+                      ignore_errors=True)
+
+
+def all_steps(ckpt_dir: str):
+    out = []
+    if not os.path.isdir(ckpt_dir):
+        return out
+    for name in os.listdir(ckpt_dir):
+        if name.startswith("step_") and not name.endswith(".tmp") \
+                and "tmp" not in name:
+            try:
+                out.append(int(name.split("_")[1]))
+            except (IndexError, ValueError):
+                pass
+    return out
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    path = os.path.join(ckpt_dir, "LATEST")
+    if not os.path.exists(path):
+        steps = all_steps(ckpt_dir)
+        return max(steps) if steps else None
+    with open(path) as f:
+        s = int(f.read().strip())
+    if not os.path.isdir(os.path.join(ckpt_dir, f"step_{s:08d}")):
+        steps = [x for x in all_steps(ckpt_dir) if x != s]
+        return max(steps) if steps else None
+    return s
+
+
+def restore(ckpt_dir: str, step: int, like_tree, shardings=None):
+    """Restore into the structure of ``like_tree``; device_put with
+    ``shardings`` when given (the elastic-remesh path passes the NEW
+    mesh's shardings — redistribution is just a resharded load)."""
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    leaves, treedef = _leaf_paths(like_tree)
+    assert manifest["n_leaves"] == len(leaves), "checkpoint/model mismatch"
+    out_leaves = []
+    sh_leaves = jax.tree.flatten(shardings)[0] if shardings is not None \
+        else [None] * len(leaves)
+    for i, (leaf, sh) in enumerate(zip(leaves, sh_leaves)):
+        arr = np.load(os.path.join(d, f"leaf_{i}.npy"))
+        if manifest["dtypes"][i] == "bfloat16":
+            arr = jax.numpy.asarray(arr).astype(jax.numpy.bfloat16)
+        if sh is not None:
+            arr = jax.device_put(arr, sh)
+        else:
+            arr = jax.numpy.asarray(arr)
+        if hasattr(leaf, "dtype") and arr.dtype != leaf.dtype:
+            arr = arr.astype(leaf.dtype)
+        out_leaves.append(arr)
+    return treedef.unflatten(out_leaves)
+
+
+class AsyncCheckpointer:
+    """Background writer: snapshot to host, save on a worker thread.
+    ``wait()`` joins the in-flight write (called before exit / failover)."""
+
+    def __init__(self, ckpt_dir: str, keep_last: int = 3):
+        self.ckpt_dir = ckpt_dir
+        self.keep_last = keep_last
+        self._thread: Optional[threading.Thread] = None
+        self.last_saved: Optional[int] = None
+
+    def save_async(self, step: int, tree) -> None:
+        """Snapshot to host *synchronously* (the train step donates its
+        inputs, so device buffers may be gone by the time the worker
+        runs), then write on the worker thread."""
+        self.wait()
+        snap = jax.tree.map(lambda x: _Tagged(*_to_host(x)), tree)
+
+        def work():
+            save(self.ckpt_dir, step, snap, keep_last=self.keep_last)
+            self.last_saved = step
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None

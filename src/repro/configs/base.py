@@ -1,0 +1,336 @@
+"""Architecture + shape configuration for the repro framework.
+
+Every assigned architecture is a frozen :class:`ArchConfig`.  The four
+assigned input shapes are :data:`SHAPES`.  ``input_specs`` produces
+``jax.ShapeDtypeStruct`` stand-ins for every model input so the multi-pod
+dry-run can ``.lower().compile()`` without allocating anything.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Shapes (assigned; seq_len x global_batch)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str  # 'train' | 'prefill' | 'decode'
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524_288, 1),
+}
+
+# Layer-kind tags used by the stack builder -------------------------------
+ATTN = "attn"          # self attention (window controlled per-layer)
+XATTN = "xattn"        # cross attention (vision / enc-dec)
+MLSTM = "mlstm"        # xLSTM matrix-memory block
+SLSTM = "slstm"        # xLSTM scalar-memory block
+HYMBA = "hymba"        # parallel attention + SSM heads
+GLOBAL_WINDOW = 1 << 30  # sentinel: "no window" (full attention)
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    """One assigned architecture.  All sizes are exact per the assignment."""
+
+    name: str
+    family: str                    # dense|moe|ssm|hybrid|vlm|audio
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 128
+
+    # --- attention pattern -------------------------------------------------
+    sliding_window: int = 0        # 0 => full attention everywhere
+    # every `global_every`-th layer (1-indexed) is full/global; others local.
+    global_every: int = 0          # 0 => homogeneous
+    rope_theta: float = 10_000.0
+    rope_theta_global: float = 0.0  # gemma3: different theta on global layers
+    # vision: every `xattn_every`-th layer is a cross-attention layer
+    xattn_every: int = 0
+    num_image_tokens: int = 0      # vlm frontend stub width
+    # audio/enc-dec
+    encoder_layers: int = 0
+    src_seq_len: int = 0           # frontend stub sequence length
+
+    # --- MoE ---------------------------------------------------------------
+    num_experts: int = 0
+    top_k: int = 0
+    num_shared_experts: int = 0
+    moe_every: int = 1             # 1 => every layer MoE; 2 => alternate
+    first_dense_layers: int = 0    # leading dense layers (Kimi-K2 style)
+    dense_d_ff: int = 0            # d_ff of the dense layers in MoE archs
+    capacity_factor: float = 1.25
+
+    # --- SSM / hybrid ------------------------------------------------------
+    ssm_state: int = 0
+    ssm_d_inner: int = 0
+    # xLSTM: pattern of (MLSTM, SLSTM) repeated
+    xlstm_pattern: Tuple[str, ...] = ()
+    full_attn_layers: Tuple[int, ...] = ()  # hymba: layers forced global
+
+    # --- training / memory knobs -------------------------------------------
+    microbatches: int = 8          # grad-accumulation steps in train_step
+    prefill_chunk: int = 4_096     # chunked-prefill granularity
+    use_fsdp: bool = False         # shard params over the data axis
+    use_pod_fsdp: bool = False     # additionally shard over the pod axis
+    optimizer: str = "adamw"       # adamw | adafactor
+    remat: bool = True
+    tie_embeddings: bool = False
+
+    # --- perf-iteration knobs (EXPERIMENTS.md §Perf) ------------------------
+    attn_q_chunk: int = 512        # 0 => no query chunking
+    attn_logits_dtype: str = "f32"  # f32 | bf16 (XLA-path logits buffer)
+    ssm_scan_dtype: str = "f32"    # f32 | bf16 (selective-scan elements)
+    mlstm_dtype: str = "f32"       # f32 | bf16 (xLSTM matmul operands)
+    mlstm_chunk: int = 256         # chunkwise-mLSTM chunk length
+    expert_gather_dtype: str = "bf16"   # bf16 | int8 (FSDP expert gathers)
+    remat_policy: str = "nothing"  # nothing | dots
+    # 'tp': model-axis tensor parallelism on block weights.  'replicate':
+    # no TP on block weights (vocab/embedding stay model-sharded) — the
+    # right call for small-width recurrent archs where GSPMD otherwise
+    # reshards tiny per-step tensors inside the time scan (§Perf).
+    shard_strategy: str = "tp"
+
+    # --- bookkeeping --------------------------------------------------------
+    skip_shapes: Tuple[str, ...] = ()   # e.g. ('long_500k',)
+    skip_reason: str = ""
+    source: str = ""
+
+    # ----------------------------------------------------------------- utils
+    @property
+    def q_dim(self) -> int:
+        return self.num_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.num_kv_heads * self.head_dim
+
+    def layer_kinds(self) -> Tuple[str, ...]:
+        """Per-layer block kind, length == num_layers (+ encoder handled apart)."""
+        if self.xlstm_pattern:
+            reps = self.num_layers // len(self.xlstm_pattern)
+            return tuple(self.xlstm_pattern) * reps
+        if self.family == "hybrid":
+            return (HYMBA,) * self.num_layers
+        kinds = []
+        for i in range(self.num_layers):
+            if self.xattn_every and (i + 1) % self.xattn_every == 0:
+                kinds.append(XATTN)
+            else:
+                kinds.append(ATTN)
+        return tuple(kinds)
+
+    def layer_windows(self) -> Tuple[int, ...]:
+        """Per-layer attention window (GLOBAL_WINDOW => full)."""
+        out = []
+        for i in range(self.num_layers):
+            if self.sliding_window <= 0:
+                out.append(GLOBAL_WINDOW)
+            elif self.global_every and (i + 1) % self.global_every == 0:
+                out.append(GLOBAL_WINDOW)
+            elif i in self.full_attn_layers:
+                out.append(GLOBAL_WINDOW)
+            else:
+                out.append(self.sliding_window)
+        return tuple(out)
+
+    def layer_thetas(self) -> Tuple[float, ...]:
+        out = []
+        windows = self.layer_windows()
+        for i in range(self.num_layers):
+            if self.rope_theta_global and windows[i] == GLOBAL_WINDOW:
+                out.append(self.rope_theta_global)
+            else:
+                out.append(self.rope_theta)
+        return tuple(out)
+
+    def moe_layer_mask(self) -> Tuple[bool, ...]:
+        """True for layers whose FFN is MoE."""
+        if not self.num_experts:
+            return (False,) * self.num_layers
+        out = []
+        for i in range(self.num_layers):
+            if i < self.first_dense_layers:
+                out.append(False)
+            elif self.moe_every > 1 and (i % self.moe_every) != (self.moe_every - 1):
+                out.append(False)
+            else:
+                out.append(True)
+        return tuple(out)
+
+    # Parameter count (for MODEL_FLOPS = 6*N*D roofline bookkeeping) -------
+    def param_count(self, active_only: bool = False) -> int:
+        D, V = self.d_model, self.vocab_size
+        n = V * D  # token embedding
+        if not self.tie_embeddings:
+            n += V * D
+        kinds = self.layer_kinds()
+        moe_mask = self.moe_layer_mask()
+        for i, kind in enumerate(kinds):
+            n += 2 * D  # pre norms
+            if kind in (ATTN, XATTN, HYMBA):
+                n += D * self.q_dim + 2 * D * self.kv_dim + self.q_dim * D
+            if kind == XATTN:  # extra self-attn stays; xattn replaces ffn? no:
+                pass
+            if kind == HYMBA:
+                di = self.ssm_d_inner
+                n += D * 2 * di + di * self.ssm_state * 2 + di * 2 + di * D
+            if kind == MLSTM:
+                # qkv + gates + out
+                n += 3 * D * self.q_dim + 2 * D * self.num_heads + self.q_dim * D
+            if kind == SLSTM:
+                n += 4 * D * self.q_dim + 4 * self.num_heads * self.head_dim ** 2 \
+                    + self.q_dim * D
+            # FFN
+            if kind in (MLSTM, SLSTM):
+                continue  # xLSTM: d_ff == 0
+            if moe_mask[i]:
+                ff = self.d_ff
+                per_expert = 3 * D * ff
+                if active_only:
+                    n += (self.top_k + self.num_shared_experts) * per_expert
+                    n += D * self.num_experts  # router
+                else:
+                    n += (self.num_experts + self.num_shared_experts) * per_expert
+                    n += D * self.num_experts
+            else:
+                ff = self.dense_d_ff or self.d_ff
+                if ff:
+                    n += 3 * D * ff
+        # encoder (enc-dec archs)
+        for _ in range(self.encoder_layers):
+            n += 2 * D
+            n += D * self.q_dim + 2 * D * self.kv_dim + self.q_dim * D
+            n += 3 * D * self.d_ff
+        if self.encoder_layers:  # decoder cross-attn params
+            n += self.num_layers * (D * self.q_dim + 2 * D * self.kv_dim
+                                    + self.q_dim * D + D)
+        if self.xattn_every:
+            n_x = sum(1 for k in kinds if k == XATTN)
+            # xattn layers already counted their self-attn; add kv/gate extra
+            n += n_x * (2 * D * self.kv_dim + 2)
+        return n
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, ArchConfig] = {}
+
+
+def register(cfg: ArchConfig) -> ArchConfig:
+    _REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get_config(name: str) -> ArchConfig:
+    if not _REGISTRY:
+        _load_all()
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def list_configs():
+    if not _REGISTRY:
+        _load_all()
+    return sorted(_REGISTRY)
+
+
+def _load_all() -> None:
+    from repro.configs import (  # noqa: F401
+        llama32_vision_11b, xlstm_350m, h2o_danube_1_8b, gemma3_4b,
+        starcoder2_7b, deepseek_7b, llama4_maverick, kimi_k2, hymba_1_5b,
+        seamless_m4t_medium, ppython_bench,
+    )
+
+
+def reduced(cfg: ArchConfig, **overrides: Any) -> ArchConfig:
+    """A tiny same-family config for CPU smoke tests."""
+    base = dict(
+        num_layers=max(2, min(4, cfg.num_layers)),
+        d_model=64,
+        num_heads=4,
+        num_kv_heads=min(cfg.num_kv_heads, 4) or 2,
+        head_dim=16,
+        d_ff=128 if cfg.d_ff else 0,
+        vocab_size=256,
+        num_experts=min(cfg.num_experts, 8),
+        top_k=min(cfg.top_k, 2),
+        num_shared_experts=min(cfg.num_shared_experts, 1),
+        dense_d_ff=128 if cfg.dense_d_ff else 0,
+        sliding_window=min(cfg.sliding_window, 8) if cfg.sliding_window else 0,
+        num_image_tokens=16 if cfg.num_image_tokens else 0,
+        encoder_layers=2 if cfg.encoder_layers else 0,
+        src_seq_len=16 if cfg.src_seq_len else 0,
+        ssm_state=cfg.ssm_state,
+        ssm_d_inner=128 if cfg.ssm_d_inner else 0,
+        microbatches=1,
+        prefill_chunk=8,
+        use_fsdp=False,
+        use_pod_fsdp=False,
+        full_attn_layers=(0,) if cfg.full_attn_layers else (),
+    )
+    if cfg.xlstm_pattern:
+        base["xlstm_pattern"] = cfg.xlstm_pattern
+        base["num_layers"] = 2 * len(cfg.xlstm_pattern)
+        base["d_ff"] = 0
+    if cfg.xattn_every:
+        base["xattn_every"] = min(cfg.xattn_every, 2)
+        base["num_layers"] = 4
+    if cfg.global_every:
+        base["global_every"] = min(cfg.global_every, 2)
+    base.update(overrides)
+    return dataclasses.replace(cfg, **base)
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStructs, no allocation)
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """Model inputs for one (arch x shape) cell as ShapeDtypeStructs.
+
+    train  : tokens/labels (B, S)
+    prefill: tokens (B, S) (+ frontend embeds)
+    decode : tokens (B, 1) + positions (B,) (+ frontend embeds); the KV cache
+             is produced separately via ``Model.cache_specs``.
+    """
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    bf16 = jnp.bfloat16
+    out: Dict[str, Any] = {}
+    if shape.kind == "train":
+        out["tokens"] = jax.ShapeDtypeStruct((B, S), i32)
+        out["labels"] = jax.ShapeDtypeStruct((B, S), i32)
+    elif shape.kind == "prefill":
+        out["tokens"] = jax.ShapeDtypeStruct((B, S), i32)
+    else:  # decode
+        out["tokens"] = jax.ShapeDtypeStruct((B, 1), i32)
+        out["positions"] = jax.ShapeDtypeStruct((B,), i32)
+    if cfg.num_image_tokens:
+        out["image_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.num_image_tokens, cfg.d_model), bf16)
+    if cfg.encoder_layers:
+        out["src_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.src_seq_len, cfg.d_model), bf16)
+    return out

@@ -1,0 +1,22 @@
+"""H2O-Danube-1.8B: llama+mistral mix with sliding-window attention.
+
+[arXiv:2401.16818; hf].  SWA (window 4096) bounds the KV cache, so the
+long_500k decode cell runs with a ring cache.
+"""
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="h2o-danube-1.8b",
+    family="dense",
+    num_layers=24,
+    d_model=2560,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=80,
+    d_ff=6912,
+    vocab_size=32000,
+    rope_theta=10_000.0,
+    sliding_window=4096,
+    microbatches=4,
+    source="arXiv:2401.16818; hf",
+))

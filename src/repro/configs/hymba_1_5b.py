@@ -1,0 +1,26 @@
+"""Hymba-1.5B: 32L hybrid with parallel attention + mamba(SSM) heads in
+every block.  [arXiv:2411.13676; hf].
+
+Per the paper, most layers use sliding-window attention (1024) with the
+first/middle/last layers global; the SSM branch gives O(1)-state decode,
+so long_500k runs.  Meta tokens are out of backbone scope.
+"""
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="hymba-1.5b",
+    family="hybrid",
+    num_layers=32,
+    d_model=1600,
+    num_heads=25,
+    num_kv_heads=5,
+    head_dim=64,
+    d_ff=5504,
+    vocab_size=32001,
+    sliding_window=1024,
+    full_attn_layers=(0, 15, 31),
+    ssm_state=16,
+    ssm_d_inner=3200,
+    microbatches=4,
+    source="arXiv:2411.13676; hf",
+))

@@ -1,0 +1,28 @@
+"""Llama-3.2-Vision-11B backbone: 40L, cross-attn image layers every 5th.
+
+[hf:meta-llama/Llama-3.2-11B-Vision; unverified].  Vision frontend is a
+stub per the assignment: ``input_specs`` supplies precomputed patch
+embeddings already projected to d_model.
+"""
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="llama-3.2-vision-11b",
+    family="vlm",
+    num_layers=40,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab_size=128256,
+    rope_theta=500_000.0,
+    xattn_every=5,                 # 8 of 40 layers are cross-attention
+    num_image_tokens=1601,         # 1 tile x (40x40+1) patches
+    microbatches=8,
+    use_fsdp=True,
+    skip_shapes=("long_500k",),
+    skip_reason="pure full attention; 500k decode cache is quadratic-history "
+                "and the assignment says to skip pure full-attention archs",
+    source="hf:meta-llama/Llama-3.2-11B-Vision; unverified",
+))

@@ -1,0 +1,32 @@
+"""Llama-4-Maverick-400B-A17B: 48L, MoE 128 experts top-1 + shared expert,
+alternating dense/MoE layers.  [hf:meta-llama/Llama-4-Scout-17B-16E;
+unverified].  Early-fusion multimodality is out of backbone scope (the
+assignment specifies the LM backbone; text tokens only here).
+"""
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="llama4-maverick-400b-a17b",
+    family="moe",
+    num_layers=48,
+    d_model=5120,
+    num_heads=40,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=8192,                    # per-expert FFN width
+    dense_d_ff=16384,             # interleaved dense layers
+    vocab_size=202048,
+    rope_theta=500_000.0,
+    num_experts=128,
+    top_k=1,
+    num_shared_experts=1,
+    moe_every=2,                  # MoE on every 2nd layer
+    capacity_factor=1.25,
+    microbatches=16,
+    use_fsdp=True,
+    use_pod_fsdp=True,
+    optimizer="adafactor",
+    skip_shapes=("long_500k",),
+    skip_reason="pure full attention",
+    source="hf:meta-llama/Llama-4-Scout-17B-16E; unverified",
+))

@@ -1,0 +1,28 @@
+"""The paper's own 'architecture': the pPython collective benchmark matrix.
+
+pPython Performance Study (Byun et al., 2023) benchmarks point-to-point,
+aggregation, and broadcast at per-process message sizes {8 B, 8 KB, 8 MB}
+over 2..768 ranks.  We register the sweep here so the benchmark harness
+and the dry-run can treat the paper's experiments as first-class configs.
+"""
+import dataclasses
+from typing import Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveBenchConfig:
+    name: str = "ppython-collectives"
+    # per-process message sizes, bytes (paper Figs 5/7)
+    message_sizes: Tuple[int, ...] = (8, 8 * 1024, 8 * 1024 * 1024)
+    # p2p sweep, bytes (paper Fig 3: 16 B .. 1 GB; we stop at 64 MB on CPU)
+    p2p_sizes: Tuple[int, ...] = tuple(16 * 4 ** i for i in range(13))
+    # rank counts (paper: 2..768; real CPU runs use <=32 virtual devices,
+    # 256/512 are modeled via the roofline terms)
+    measured_ranks: Tuple[int, ...] = (2, 4, 8, 16, 32)
+    modeled_ranks: Tuple[int, ...] = (64, 128, 256, 512, 768)
+    # paper's node boundary: 48 ranks/node; ours: 256 chips/pod
+    ranks_per_node: int = 48
+    dtype: str = "uint8"
+
+
+CONFIG = CollectiveBenchConfig()

@@ -1,0 +1,27 @@
+"""SeamlessM4T-medium backbone: 12L encoder + 12L decoder, MHA (kv=16).
+
+[arXiv:2308.11596; hf].  The audio frontend is a stub per the assignment:
+``input_specs`` supplies precomputed frame embeddings at d_model for the
+encoder.  decode shapes lower the decoder step (self-cache + static
+cross-attention KV from the encoder output).  long_500k is skipped
+(enc-dec with full decoder self-attention).
+"""
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="seamless-m4t-medium",
+    family="audio",
+    num_layers=12,                # decoder layers
+    encoder_layers=12,
+    src_seq_len=1024,             # precomputed audio frames (stub)
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=16,
+    head_dim=64,
+    d_ff=4096,
+    vocab_size=256206,
+    microbatches=2,
+    skip_shapes=("long_500k",),
+    skip_reason="enc-dec with full decoder self-attention",
+    source="arXiv:2308.11596; hf",
+))

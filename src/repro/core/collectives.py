@@ -1,0 +1,257 @@
+"""The paper's collectives, adapted to the TPU mesh.
+
+Three families, all expressed as `shard_map` bodies over mesh axes:
+
+* ``tree_*``   — pPython's node-aware binary-tree algorithms (paper
+  Figs 4/6): log2(P) `ppermute` rounds per hierarchy level, with the
+  cross-pod ("off-node") level separated from the in-pod ("in-node")
+  level exactly as the paper separates scp-hops from shm-hops.
+* ``serial_*`` — pPython's *initial* serialized algorithms (the Fig 7
+  baseline): P-1 rounds.
+* ``hier_*``   — the beyond-paper production variant: in-pod
+  reduce-scatter -> cross-pod all-reduce (optionally int8-compressed:
+  the slow-DCI analogue of the paper's "use the right filesystem per
+  level" finding) -> in-pod all-gather.
+
+The native XLA collectives (plain psum/all_gather) play the role of the
+paper's mpi4py/OpenMPI-RoCE baseline.
+
+All functions take ``x`` with the *per-rank value in the shard* along
+``axis`` and are numerically equivalent to their flat counterparts —
+property-tested in tests/test_collectives.py on virtual devices.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, PartitionSpec as P
+from jax import shard_map
+
+from repro.core import topology
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# single-axis primitives (run *inside* shard_map)
+# ---------------------------------------------------------------------------
+
+def _axis_size(axis: str) -> int:
+    return lax.axis_size(axis)
+
+
+def tree_bcast_axis(x: Array, axis: str, root: int = 0) -> Array:
+    """Binary-tree broadcast along one mesh axis (in-shard_map).
+
+    The value on rank ``root`` wins; other ranks' payloads are ignored.
+    log2(n) ppermute rounds — the paper's optimized broadcast."""
+    n = lax.axis_size(axis)
+    me = lax.axis_index(axis)
+    have = (me == root)
+    for rnd in topology.tree_bcast_rounds(n, root):
+        recv = lax.ppermute(x, axis, rnd)
+        dsts = jnp.array([d for _, d in rnd], jnp.int32)
+        is_dst = jnp.any(me == dsts)
+        take = is_dst & ~have
+        x = jnp.where(take, recv, x)
+        have = have | is_dst
+    return x
+
+
+def serial_bcast_axis(x: Array, axis: str, root: int = 0) -> Array:
+    """The paper's initial serialized broadcast: n-1 rounds, root sends to
+    one rank per round."""
+    n = lax.axis_size(axis)
+    me = lax.axis_index(axis)
+    for rnd in topology.serial_bcast_rounds(n, root):
+        recv = lax.ppermute(x, axis, rnd)
+        (src, dst), = rnd
+        x = jnp.where(me == dst, recv, x)
+    return x
+
+
+def tree_reduce_axis(x: Array, axis: str, root: int = 0) -> Array:
+    """Binary-tree sum-reduction to ``root`` along one axis (the reduce
+    flavour of the paper's agg)."""
+    n = lax.axis_size(axis)
+    for rnd in topology.tree_gather_rounds(n, root):
+        recv = lax.ppermute(x, axis, rnd)
+        me = lax.axis_index(axis)
+        dsts = jnp.array([d for _, d in rnd], jnp.int32)
+        is_dst = jnp.any(me == dsts)
+        x = jnp.where(is_dst, x + recv, x)
+    return x
+
+
+def tree_gather_axis(x: Array, axis: str, root: int = 0) -> Array:
+    """Binary-tree concat-gather to ``root`` (paper Fig 4 agg): message
+    doubles each round, exactly the paper's growing aggregation buffers.
+    Returns (n*shard,) on root; junk elsewhere (masked by caller)."""
+    n = lax.axis_size(axis)
+    me = lax.axis_index(axis)
+    flat = x.reshape(-1)
+    local = flat.shape[0]
+    buf = flat
+    step = 1
+    while step < n:
+        # senders: ranks at odd multiples of `step` (relative to root)
+        rel = (me - root) % n
+        pairs = []
+        for i in range(0, n, 2 * step):
+            j = i + step
+            if j < n:
+                pairs.append((((j + root) % n), ((i + root) % n)))
+        recv = lax.ppermute(buf, axis, pairs)
+        # receivers append; non-receivers keep garbage (masked at the end)
+        buf = jnp.concatenate([buf, recv], axis=0)
+        step *= 2
+    if buf.shape[0] < n * local:  # non-power-of-two: pad
+        buf = jnp.pad(buf, (0, n * local - buf.shape[0]))
+    return jnp.where(me == root, buf[: n * local],
+                     jnp.zeros((n * local,), x.dtype))
+
+
+def ring_allgather_axis(x: Array, axis: str) -> Array:
+    """Ring all-gather via n-1 ppermutes (bandwidth-optimal reference for
+    the benchmark harness)."""
+    n = lax.axis_size(axis)
+    me = lax.axis_index(axis)
+    flat = x.reshape(-1)
+    local = flat.shape[0]
+    out = jnp.zeros((n, local), x.dtype)
+    out = lax.dynamic_update_slice(out, flat[None], (me, 0))
+    block = flat
+    perm = [(i, (i + 1) % n) for i in range(n)]
+    for k in range(1, n):
+        block = lax.ppermute(block, axis, perm)
+        src = (me - k) % n
+        out = lax.dynamic_update_slice(out, block[None], (src, 0))
+    return out.reshape((n,) + x.shape)
+
+
+# ---------------------------------------------------------------------------
+# two-level ("node-aware" -> "pod-aware") compositions
+# ---------------------------------------------------------------------------
+
+def _inner_axes(mesh: Mesh, axes: Optional[Sequence[str]]) -> Tuple[str, ...]:
+    if axes is not None:
+        return tuple(axes)
+    return tuple(a for a in mesh.axis_names if a != "pod")
+
+
+def two_level_bcast(x: Array, *, pod_axis: Optional[str], in_axes:
+                    Sequence[str], tree: bool = True, root: int = 0) -> Array:
+    """Paper Fig 6: broadcast among pod leaders first (off-node level),
+    then within each pod (in-node level)."""
+    fn = tree_bcast_axis if tree else serial_bcast_axis
+    if pod_axis is not None:
+        x = fn(x, pod_axis, root)
+    for a in in_axes:
+        x = fn(x, a, root)
+    return x
+
+
+def two_level_agg(x: Array, *, pod_axis: Optional[str],
+                  in_axes: Sequence[str], root: int = 0) -> Array:
+    """Paper Fig 4: binary-tree aggregation, in-node level first, then
+    across nodes.  Concat semantics; result lands on global rank 0.
+    Axes are gathered innermost-first so block order matches the C-order
+    rank layout (rank = (((pod) * data) + d) * model + m)."""
+    for a in reversed(tuple(in_axes)):
+        x = tree_gather_axis(x, a, root)
+    if pod_axis is not None:
+        x = tree_gather_axis(x, pod_axis, root)
+    return x
+
+
+def hier_allreduce_local(x: Array, *, pod_axis: Optional[str],
+                         in_axes: Sequence[str],
+                         compress: Optional[str] = None) -> Array:
+    """In-shard_map hierarchical all-reduce (beyond-paper production
+    variant): reduce-scatter in-pod -> all-reduce cross-pod (optionally
+    int8) -> all-gather in-pod.  Falls back to plain psum for shapes that
+    do not divide."""
+    shape = x.shape
+    flat = x.reshape(-1)
+    n_in = 1
+    for a in in_axes:
+        n_in *= lax.axis_size(a)
+    if flat.shape[0] % n_in or n_in == 1:
+        y = lax.psum(x, tuple(in_axes))
+        if pod_axis is not None:
+            y = lax.psum(y, pod_axis)
+        return y
+    # in-pod reduce-scatter over the (flattened) composite axis
+    shard = lax.psum_scatter(flat.reshape(n_in, -1), tuple(in_axes),
+                             scatter_dimension=0, tiled=False)
+    if pod_axis is not None:
+        if compress == "int8":
+            scale = jnp.maximum(jnp.max(jnp.abs(shard)), 1e-8) / 127.0
+            scale = lax.pmax(scale, pod_axis)
+            q = jnp.clip(jnp.round(shard / scale), -127, 127
+                         ).astype(jnp.int32)
+            shard = lax.psum(q, pod_axis).astype(shard.dtype) * scale
+        else:
+            shard = lax.psum(shard, pod_axis)
+    out = lax.all_gather(shard, tuple(in_axes), axis=0, tiled=True)
+    return out.reshape(shape)
+
+
+def tree_allreduce_local(x: Array, *, pod_axis: Optional[str],
+                         in_axes: Sequence[str]) -> Array:
+    """Paper-faithful all-reduce = agg (tree reduce to leader, Fig 4) +
+    broadcast (tree, Fig 6) — what pPython programs compose from agg() and
+    bcast()."""
+    for a in in_axes:
+        x = tree_reduce_axis(x, a)
+    if pod_axis is not None:
+        x = tree_reduce_axis(x, pod_axis)
+        x = tree_bcast_axis(x, pod_axis)
+    for a in in_axes:
+        x = tree_bcast_axis(x, a)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# jit-level wrappers (build their own shard_map)
+# ---------------------------------------------------------------------------
+
+def _wrap(fn, mesh: Mesh, replicated_out: bool = True):
+    spec = P()  # value replicated per rank; payloads differ only at root
+
+    def run(x):
+        return shard_map(fn, mesh=mesh, in_specs=(spec,), out_specs=spec,
+                         check_vma=False)(x)
+    return run
+
+
+def allreduce_tree(x, mesh: Mesh, compress: Optional[str] = None):
+    """Replicated-in, replicated-out hierarchical tree all-reduce of a
+    *sharded-by-interpretation* value: callers hold per-device partials."""
+    pod = "pod" if "pod" in mesh.axis_names else None
+    in_axes = tuple(a for a in mesh.axis_names if a != "pod")
+    fn = functools.partial(tree_allreduce_local, pod_axis=pod,
+                           in_axes=in_axes)
+    return _wrap(fn, mesh)(x)
+
+
+def allreduce_hier(x, mesh: Mesh, compress: Optional[str] = None):
+    pod = "pod" if "pod" in mesh.axis_names else None
+    in_axes = tuple(a for a in mesh.axis_names if a != "pod")
+    fn = functools.partial(hier_allreduce_local, pod_axis=pod,
+                           in_axes=in_axes, compress=compress)
+    return _wrap(fn, mesh)(x)
+
+
+def hier_allreduce_tree(tree, mesh: Mesh, already_summed: bool = False,
+                        compress: Optional[str] = None):
+    """Apply hier_allreduce leaf-wise to a pytree of gradients.  When
+    ``already_summed`` (GSPMD produced global grads) this is the identity
+    — present so the trainer can route every mode through one call site."""
+    if already_summed:
+        return tree
+    return jax.tree.map(lambda g: allreduce_hier(g, mesh, compress), tree)

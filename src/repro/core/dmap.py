@@ -1,0 +1,196 @@
+"""Dmap — pPython's map construct (paper Fig 1), up to 4-D.
+
+A map assigns blocks of a numerical array to processing elements:
+  * ``grid``  — processor grid, one entry per distributed dim;
+  * ``dist``  — per-dim distribution: ``('b',)`` block, ``('c',)`` cyclic,
+                ``('bc', k)`` block-cyclic with block size k;
+  * ``procs`` — linear list of ranks holding the data (subsets allowed);
+  * ``order`` — 'C' (row-major, Python default) or 'F' (column-major) —
+                the paper's ``order`` keyword;
+  * ``overlap`` — per-dim halo width (overlapped distributions).
+
+All index math is static numpy; the storage layout contract with Dmat is:
+``storage[rank, *local_pad]`` where ``local_pad`` is the per-dim maximum
+local extent (ragged tails padded).  ``global_index_arrays`` /
+``storage_index_arrays`` are the two gather maps that localize /
+globalize — their composition implements redistribution between *any*
+two block-cyclic-overlapped maps, the capability the paper calls out as
+"highly complex to program for the user but solved by the library".
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+DistSpec = Tuple  # ('b',) | ('c',) | ('bc', int)
+
+
+def _norm_dist(d: Union[str, Tuple]) -> DistSpec:
+    if isinstance(d, str):
+        if d == "b":
+            return ("b",)
+        if d == "c":
+            return ("c",)
+        raise ValueError(d)
+    if d[0] in ("b", "c"):
+        return tuple(d)
+    if d[0] == "bc":
+        return ("bc", int(d[1]))
+    raise ValueError(d)
+
+
+@dataclasses.dataclass(frozen=True)
+class Dmap:
+    grid: Tuple[int, ...]
+    dist: Tuple[DistSpec, ...] = ()
+    procs: Tuple[int, ...] = ()
+    order: str = "C"
+    overlap: Tuple[int, ...] = ()
+
+    def __post_init__(self):
+        grid = tuple(int(g) for g in self.grid)
+        if not 1 <= len(grid) <= 4:
+            raise ValueError("pPython maps support 1..4 dims")
+        dist = tuple(_norm_dist(d) for d in self.dist) or (("b",),) * len(grid)
+        if len(dist) != len(grid):
+            raise ValueError("dist/grid rank mismatch")
+        procs = tuple(int(p) for p in self.procs) or tuple(
+            range(int(np.prod(grid))))
+        if len(procs) != int(np.prod(grid)):
+            raise ValueError("len(procs) must equal prod(grid)")
+        overlap = tuple(int(o) for o in self.overlap) or (0,) * len(grid)
+        if self.order not in ("C", "F"):
+            raise ValueError("order must be 'C' or 'F'")
+        object.__setattr__(self, "grid", grid)
+        object.__setattr__(self, "dist", dist)
+        object.__setattr__(self, "procs", procs)
+        object.__setattr__(self, "overlap", overlap)
+
+    # ------------------------------------------------------------------ dims
+    @property
+    def ndim(self) -> int:
+        return len(self.grid)
+
+    def coords_of_rank_slot(self, slot: int) -> Tuple[int, ...]:
+        """Grid coordinates of the slot-th entry of ``procs``."""
+        return tuple(np.unravel_index(slot, self.grid, order=self.order))
+
+    # ------------------------------------------------------- per-dim mapping
+    def _dim_map(self, n: int, d: int) -> Tuple[np.ndarray, np.ndarray]:
+        """For dim d of extent n: arrays (proc_coord[n], local_index[n])."""
+        g = self.grid[d]
+        idx = np.arange(n)
+        kind = self.dist[d][0]
+        if kind == "b":
+            bsize = -(-n // g)
+            coord = np.minimum(idx // bsize, g - 1)
+            local = idx - coord * bsize
+        elif kind == "c":
+            coord = idx % g
+            local = idx // g
+        else:  # block-cyclic
+            k = self.dist[d][1]
+            coord = (idx // k) % g
+            local = (idx // (g * k)) * k + idx % k
+        return coord.astype(np.int64), local.astype(np.int64)
+
+    def local_extent(self, n: int, d: int) -> int:
+        """Max local extent along dim d (before overlap)."""
+        coord, local = self._dim_map(n, d)
+        return int(local.max()) + 1 if n else 0
+
+    def local_shape(self, shape: Sequence[int]) -> Tuple[int, ...]:
+        return tuple(self.local_extent(n, d) + 2 * self.overlap[d]
+                     for d, n in enumerate(shape))
+
+    # -------------------------------------------------------- gather tables
+    @functools.lru_cache(maxsize=64)
+    def owner_tables(self, shape: Tuple[int, ...]):
+        """Per-dim (coord, local) arrays; cached."""
+        if len(shape) != self.ndim:
+            raise ValueError("map rank != array rank")
+        return tuple(self._dim_map(n, d) for d, n in enumerate(shape))
+
+    def rank_of_coords(self, coords) -> np.ndarray:
+        """Grid coords (each an int array) -> rank id from ``procs``."""
+        slot = np.ravel_multi_index(coords, self.grid, order=self.order)
+        return np.asarray(self.procs, np.int64)[slot]
+
+    def storage_index_arrays(self, shape: Tuple[int, ...], n_ranks: int):
+        """Gather map: storage[rank, l0.., lk] = global[i0.., ik].
+
+        Returns (index arrays per global dim shaped like the storage
+        (n_ranks, *local_pad), valid mask).  Overlap halos replicate the
+        neighbouring rows."""
+        tables = self.owner_tables(tuple(shape))
+        local_pad = self.local_shape(shape)
+        # invert: for each (rank, local) which global index?
+        inv = []
+        for d, n in enumerate(shape):
+            coord, local = tables[d]
+            ext = local_pad[d]
+            ov = self.overlap[d]
+            tab = np.full((self.grid[d], ext), -1, np.int64)
+            tab[coord, local + ov] = np.arange(n)
+            if ov:
+                # halo: replicate neighbour edges (same global indices)
+                for c in range(self.grid[d]):
+                    own = np.where(coord == c)[0]
+                    if own.size == 0:
+                        continue
+                    lo, hi = own.min(), own.max()
+                    tab[c, :ov] = [max(lo - ov + i, 0) for i in range(ov)] \
+                        if lo > 0 else tab[c, ov]
+                    for i in range(ov):
+                        tab[c, ext - ov + i] = min(hi + 1 + i, shape[d] - 1)
+            inv.append(tab)
+        # rank -> grid coords (slot ordering); ranks outside map -> invalid
+        rank_to_slot = np.full((n_ranks,), -1, np.int64)
+        for slot, r in enumerate(self.procs):
+            if r < n_ranks:
+                rank_to_slot[r] = slot
+        idx_arrays = []
+        valid = np.ones((n_ranks,) + tuple(local_pad), bool)
+        for d in range(self.ndim):
+            arr = np.zeros((n_ranks,) + tuple(local_pad), np.int64)
+            for r in range(n_ranks):
+                slot = rank_to_slot[r]
+                if slot < 0:
+                    valid[r] = False
+                    continue
+                c = self.coords_of_rank_slot(int(slot))[d]
+                view = inv[d][c]
+                shp = [1] * self.ndim
+                shp[d] = local_pad[d]
+                arr[r] = np.broadcast_to(view.reshape(shp), tuple(local_pad))
+            idx_arrays.append(arr)
+        for a in idx_arrays:
+            valid &= a >= 0
+        idx_arrays = [np.maximum(a, 0) for a in idx_arrays]
+        return idx_arrays, valid
+
+    def global_index_arrays(self, shape: Tuple[int, ...]):
+        """Gather map: global[i..] = storage[rank(i..), local(i..)].
+        Returns (rank array, per-dim local arrays), each shaped
+        ``shape``.  Overlap offsets are applied (owned region starts at
+        ``overlap[d]``)."""
+        tables = self.owner_tables(tuple(shape))
+        coords = []
+        locals_ = []
+        for d in range(self.ndim):
+            coord, local = tables[d]
+            shp = [1] * self.ndim
+            shp[d] = shape[d]
+            coords.append(np.broadcast_to(coord.reshape(shp), shape))
+            locals_.append(np.broadcast_to(
+                (local + self.overlap[d]).reshape(shp), shape))
+        rank = self.rank_of_coords(tuple(coords))
+        return rank, locals_
+
+
+def dmap_serial() -> Optional["Dmap"]:
+    """The paper's 'set the map to 1' serial fallback."""
+    return None

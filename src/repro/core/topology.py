@@ -1,0 +1,86 @@
+"""Rank-tree schedules for the paper's node-aware collectives.
+
+pPython organizes collectives into two hierarchy levels (in-node /
+off-node, paper Figs 4 & 6) with a binary tree inside each level.  On the
+TPU mesh the levels are the mesh axes themselves: ``pod`` is the paper's
+"off-node" (slow DCI) level and ``data``/``model`` the "in-node" (ICI)
+level.  A binary tree over a composite level is the composition of
+per-axis binary trees, so all schedules below are per-axis and the
+collective layer chains them.
+
+A *schedule* is a list of rounds; each round is a list of (src, dst) rank
+pairs — directly consumable by ``lax.ppermute``.
+"""
+from __future__ import annotations
+
+import math
+from typing import List, Sequence, Tuple
+
+Round = List[Tuple[int, int]]
+
+
+def _ceil_log2(n: int) -> int:
+    return max(0, (n - 1).bit_length())
+
+
+def tree_bcast_rounds(n: int, root: int = 0) -> List[Round]:
+    """Binary-tree broadcast (paper Fig 6): after round r, 2^(r+1) ranks
+    hold the data.  Ranks are rotated so ``root`` is logical 0."""
+    rounds: List[Round] = []
+    have = 1
+    while have < n:
+        rnd: Round = []
+        for i in range(have):
+            j = i + have
+            if j < n:
+                rnd.append((((i + root) % n), ((j + root) % n)))
+        rounds.append(rnd)
+        have *= 2
+    return rounds
+
+
+def serial_bcast_rounds(n: int, root: int = 0) -> List[Round]:
+    """The paper's *initial* broadcast: root sends to each rank in turn
+    (P-1 serialized rounds; the Fig 7 'initial implementation')."""
+    return [[(root, (root + i) % n)] for i in range(1, n)]
+
+
+def tree_gather_rounds(n: int, root: int = 0) -> List[Round]:
+    """Binary-tree gather to ``root`` (paper Fig 4 aggregation): the
+    reverse of broadcast; at round r, ranks odd in units of 2^(r+1) send
+    their accumulated block to their even partner."""
+    rounds: List[Round] = []
+    step = 1
+    while step < n:
+        rnd: Round = []
+        for i in range(0, n, 2 * step):
+            j = i + step
+            if j < n:
+                rnd.append((((j + root) % n), ((i + root) % n)))
+        rounds.append(rnd)
+        step *= 2
+    return rounds
+
+
+def serial_gather_rounds(n: int, root: int = 0) -> List[Round]:
+    return [[((root + i) % n, root)] for i in range(1, n)]
+
+
+def ring_rounds(n: int, shift: int = 1) -> List[Round]:
+    return [[(i, (i + shift) % n) for i in range(n)]]
+
+
+def bcast_round_count(n: int, tree: bool) -> int:
+    return _ceil_log2(n) if tree else max(n - 1, 0)
+
+
+def two_level_cost(n_local: int, n_global: int, bytes_per_rank: float,
+                   ici_bw: float, dci_bw: float, tree: bool = True
+                   ) -> float:
+    """Analytic broadcast-time model used by the benchmark harness to
+    extrapolate the paper's 2..768-rank sweep to pod scale: per-level
+    round count x bytes / level bandwidth."""
+    r_local = bcast_round_count(n_local, tree)
+    r_global = bcast_round_count(n_global, tree)
+    return (r_local * bytes_per_rank / ici_bw
+            + r_global * bytes_per_rank / dci_bw)

@@ -1,0 +1,28 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+``attention`` dispatches to the flash kernel on TPU (or when forced via
+``use_kernel=True``, e.g. interpret-mode tests) and to the pure-jnp
+reference otherwise — the dry-run on the CPU backend lowers the XLA
+path, the kernel is the TPU deployment path (see DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.mlstm_chunk import mlstm_chunk
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def attention(q, k, v, *, causal: bool = True, window: int = 0,
+              use_kernel: bool = False, interpret: bool = False,
+              block_q: int = 128, block_k: int = 128):
+    if use_kernel or on_tpu():
+        return flash_attention(q, k, v, causal=causal, window=window,
+                               block_q=block_q, block_k=block_k,
+                               interpret=interpret or not on_tpu())
+    return ref.attention_ref(q, k, v, causal=causal, window=window)

@@ -1,0 +1,34 @@
+"""Pure-jnp oracles for every kernel in this package."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """Exact attention.  q: (B, Sq, Hq, dh); k/v: (B, Sk, Hkv, dh)."""
+    B, Sq, Hq, dh = q.shape
+    _, Sk, Hkv, _ = k.shape
+    g = Hq // Hkv
+    qg = q.reshape(B, Sq, Hkv, g, dh).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bshd->bhgqs", qg, kf) * dh ** -0.5
+    if causal:
+        qi = jnp.arange(Sq)[:, None]
+        ki = jnp.arange(Sk)[None, :]
+        rel = qi - ki
+        mask = rel >= 0
+        if window > 0:
+            mask &= rel < window
+        s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqs,bshd->bqhgd", p, vf)
+    return o.reshape(B, Sq, Hq, dh).astype(q.dtype)
+
+
+def mlstm_chunk_ref(q, k, v, li, lf, state):
+    """Chunkwise mLSTM oracle — re-exports the model-layer implementation
+    (which is itself validated against the L=1 sequential recurrence)."""
+    from repro.models.ssm import _mlstm_chunk
+    return _mlstm_chunk(q, k, v, li, lf, state)

@@ -1,0 +1,226 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count="
+    + os.environ.get("REPRO_DRYRUN_DEVICES", "512")
+    + " " + os.environ.get("REPRO_EXTRA_XLA_FLAGS", ""))
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x
+mesh) cell against the production mesh, with ShapeDtypeStruct inputs only
+(no allocation), and record memory/cost/collective analysis for the
+roofline.
+
+The two lines above MUST run before any other import (jax locks the
+device count at first init).  Run cells in subprocesses via ``--all``:
+
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma3-4b \
+        --shape train_4k --mesh single --out out.json
+"""
+import argparse
+import json
+import subprocess
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+RESULT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                          "experiments", "dryrun")
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             local_mesh=None, reduced: bool = False,
+             overrides: dict = None) -> dict:
+    import dataclasses
+    from repro.configs.base import SHAPES, get_config, input_specs, reduced as reduce_cfg
+    from repro.launch.mesh import make_local_mesh, make_production_mesh
+    from repro.models.model import Model
+    from repro.optim.optimizer import OptimizerConfig, opt_init
+    from repro.roofline import hlo as hlo_lib
+    from repro.train import steps as steps_lib
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    meta = {"arch": arch, "shape": shape_name,
+            "mesh": "multi" if multi_pod else "single"}
+    if shape_name in cfg.skip_shapes:
+        return {**meta, "status": "SKIP", "reason": cfg.skip_reason}
+    if reduced:
+        cfg = reduce_cfg(cfg)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+        meta["overrides"] = dict(overrides)
+    if local_mesh:
+        mesh = make_local_mesh(*local_mesh)
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+
+    model = Model(cfg, mesh)
+    ocfg = OptimizerConfig(name=cfg.optimizer)
+    bundle = steps_lib.sharding_bundle(model, ocfg, shape)
+    ns = lambda s: NamedSharding(mesh, s)
+
+    t0 = time.time()
+    if shape.kind == "train":
+        train_step, mb = steps_lib.make_train_step(
+            model, ocfg, shape.global_batch)
+        meta["microbatches"] = mb
+        abstract_opt = bundle["abstract_opt"]
+        step_s = jax.ShapeDtypeStruct((), jnp.int32)
+        fn = jax.jit(
+            train_step,
+            in_shardings=(bundle["params"], bundle["opt"],
+                          bundle["input_shardings"], ns(P())),
+            out_shardings=(bundle["params"], bundle["opt"], None),
+            donate_argnums=(0, 1))
+        lowered = fn.lower(bundle["abstract_params"], abstract_opt,
+                           bundle["inputs"], step_s)
+    elif shape.kind == "prefill":
+        prefill = steps_lib.make_prefill_step(model)
+        inputs = dict(bundle["inputs"])
+        tokens = inputs.pop("tokens")
+        tok_sh = dict(bundle["input_shardings"])
+        tok = tok_sh.pop("tokens")
+        fn = jax.jit(prefill,
+                     in_shardings=(bundle["params"], tok, tok_sh),
+                     out_shardings=(None, bundle["cache"]))
+        lowered = fn.lower(bundle["abstract_params"], tokens, inputs)
+    else:  # decode
+        decode = steps_lib.make_decode_step(model)
+        inputs = bundle["inputs"]
+        ish = bundle["input_shardings"]
+        fn = jax.jit(decode,
+                     in_shardings=(bundle["params"], ish["tokens"],
+                                   ish["positions"], bundle["cache"]),
+                     out_shardings=(None, bundle["cache"]),
+                     donate_argnums=(3,))
+        lowered = fn.lower(bundle["abstract_params"], inputs["tokens"],
+                           inputs["positions"], bundle["abstract_cache"])
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    n_pods = mesh.shape.get("pod", 1)
+    pod_size = mesh.devices.size // n_pods
+    hlo = hlo_lib.analyze(compiled.as_text(), pod_size=pod_size,
+                          n_pods=n_pods)
+    n_dev = mesh.devices.size
+    result = {
+        **meta,
+        "status": "OK",
+        "devices": int(n_dev),
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        # raw XLA numbers (while bodies counted once — undercounts loops)
+        "xla_flops_per_device": cost.get("flops", 0.0),
+        "xla_bytes_per_device": cost.get("bytes accessed", 0.0),
+        # loop-adjusted HLO analysis (see repro.roofline.hlo)
+        "flops_per_device": hlo["dot_flops"],
+        "bytes_per_device": hlo["bytes"],
+        "collectives": hlo["collectives"],
+        "link_bytes_per_device": hlo["link_bytes"],
+        "dci_link_bytes_per_device": hlo["dci_link_bytes"],
+        "loops": hlo["loops"][:40],
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+        },
+    }
+    print(f"[dryrun] {arch} {shape_name} mesh={meta['mesh']} "
+          f"compile={t_compile:.1f}s flops/dev={result['flops_per_device']:.3e} "
+          f"hbm/dev={hlo['bytes']/2**30:.2f}GiB "
+          f"temp/dev={mem.temp_size_in_bytes/2**30:.2f}GiB "
+          f"link/dev={hlo['link_bytes']/2**20:.1f}MiB "
+          f"dci/dev={hlo['dci_link_bytes']/2**20:.1f}MiB")
+    return result
+
+
+def all_cells():
+    from repro.configs.base import SHAPES, get_config, list_configs
+    for arch in list_configs():
+        for shape in SHAPES:
+            yield arch, shape
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=("single", "multi", "both"),
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--local-mesh", type=str, default="",
+                    help="data,model[,pod] sizes for small-scale testing")
+    ap.add_argument("--out", type=str, default="")
+    ap.add_argument("--timeout", type=int, default=1800)
+    ap.add_argument("--override", type=str, default="",
+                    help="cfg overrides for perf A/B, e.g. "
+                         "'microbatches=4,attn_logits_dtype=bf16'")
+    args = ap.parse_args()
+    overrides = {}
+    for kv in filter(None, args.override.split(",")):
+        k, v = kv.split("=")
+        try:
+            v = int(v)
+        except ValueError:
+            try:
+                v = float(v)
+            except ValueError:
+                pass
+        overrides[k] = v
+
+    os.makedirs(RESULT_DIR, exist_ok=True)
+    local_mesh = None
+    if args.local_mesh:
+        parts = [int(x) for x in args.local_mesh.split(",")]
+        local_mesh = tuple(parts)
+
+    if args.all:
+        # drive each cell in a subprocess (isolation + bounded memory)
+        failures = []
+        for arch, shape in all_cells():
+            for mesh in (("single", "multi") if args.mesh == "both"
+                         else (args.mesh,)):
+                out = os.path.join(RESULT_DIR, f"{arch}__{shape}__{mesh}.json")
+                if os.path.exists(out):
+                    continue
+                cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                       "--arch", arch, "--shape", shape, "--mesh", mesh,
+                       "--out", out]
+                if args.reduced:
+                    cmd.append("--reduced")
+                r = subprocess.run(cmd, timeout=args.timeout)
+                if r.returncode:
+                    failures.append((arch, shape, mesh))
+        print("FAILURES:", failures)
+        return 1 if failures else 0
+
+    meshes = ("single", "multi") if args.mesh == "both" else (args.mesh,)
+    rc = 0
+    for mesh in meshes:
+        try:
+            res = run_cell(args.arch, args.shape, mesh == "multi",
+                           local_mesh, args.reduced, overrides)
+        except Exception as e:  # noqa: BLE001
+            res = {"arch": args.arch, "shape": args.shape, "mesh": mesh,
+                   "status": "FAIL", "error": traceback.format_exc()[-4000:]}
+            print(f"[dryrun] FAIL {args.arch} {args.shape} {mesh}: {e}",
+                  file=sys.stderr)
+            rc = 1
+        if args.out:
+            with open(args.out, "w") as f:
+                json.dump(res, f, indent=1)
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

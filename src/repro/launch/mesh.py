@@ -1,0 +1,37 @@
+"""Mesh construction.  ``make_production_mesh`` is a function (never a
+module-level constant) so importing this module touches no jax device
+state — required because the dry-run must set
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before jax init.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """The assigned production mesh: 16x16 chips per pod; 2 pods multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(data: int = 1, model: int = 1, pod: int = 0):
+    """Small mesh over however many (virtual) devices exist — tests and
+    CPU examples."""
+    n = len(jax.devices())
+    need = max(1, data) * max(1, model) * max(1, pod or 1)
+    assert need <= n, f"need {need} devices, have {n}"
+    if pod:
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def mesh_for_devices(n: int, prefer_model: int = 0):
+    """Factor ``n`` devices into a (data, model) mesh."""
+    model = prefer_model or int(np.gcd(n, 16))
+    while n % model:
+        model //= 2
+    return jax.make_mesh((n // model, model), ("data", "model"))

@@ -1,0 +1,56 @@
+"""Serving launcher: load (or randomly init) a model and serve a batch of
+synthetic requests through the engine.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch gemma3-4b --reduced
+"""
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--slots", type=int, default=8)
+    ap.add_argument("--max-len", type=int, default=512)
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--new-tokens", type=int, default=32)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--ckpt", default="")
+    args = ap.parse_args()
+
+    import jax
+    import numpy as np
+    from repro.configs.base import get_config, reduced
+    from repro.launch.mesh import mesh_for_devices
+    from repro.models.model import Model
+    from repro.serve.engine import Engine, Request
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+    mesh = mesh_for_devices(len(jax.devices()))
+    engine = Engine(cfg, mesh, slots=args.slots, max_len=args.max_len)
+    model = Model(cfg, mesh)
+    if args.ckpt:
+        from repro.checkpoint import checkpoint as ck
+        step = ck.latest_step(args.ckpt)
+        tree = ck.restore(args.ckpt, step,
+                          {"params": model.init_abstract()})
+        params = tree["params"]
+    else:
+        params = model.init(jax.random.PRNGKey(0))
+    engine.load(params)
+
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        size=int(rng.integers(8, 64))),
+                    max_new_tokens=args.new_tokens)
+            for i in range(args.requests)]
+    results = engine.run_to_completion(reqs)
+    done = sum(len(v) for v in results.values())
+    print(f"[serve] completed {len(results)}/{args.requests} requests, "
+          f"{done} tokens")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,109 @@
+"""KV / recurrent-state cache machinery.
+
+A *cache entry* serves one stack of ``count`` identical layers (the scan
+group).  KV entries are ring buffers of length ``cache_len`` =
+min(max_len, window): sliding-window layers keep only their window, global
+layers the full sequence.  Slot positions are tracked explicitly in
+``pos`` (shape (B, cache_len), -1 = empty) so attention masks are always
+derived from true token positions — this makes ring wraparound, chunked
+prefill and per-sequence decode offsets all fall out of one code path.
+
+Update discipline (see repro/models/blocks.py):
+  * chunk extend (C > 1): attend over [old cache ++ chunk], then write the
+    chunk into the ring ("attend-then-update" — never clobbers keys the
+    chunk still needs);
+  * decode (C == 1): write first, then attend over the ring only
+    ("update-then-attend" — avoids a full cache copy per token; safe
+    because the overwritten slot is exactly window positions old).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+Array = jax.Array
+
+
+def kv_entry(count: int, batch: int, cache_len: int, kv_heads: int,
+             head_dim: int, dtype=jnp.bfloat16) -> Dict[str, Array]:
+    return {
+        "k": jnp.zeros((count, batch, cache_len, kv_heads, head_dim), dtype),
+        "v": jnp.zeros((count, batch, cache_len, kv_heads, head_dim), dtype),
+        "pos": jnp.full((batch, cache_len), -1, jnp.int32),
+    }
+
+
+def kv_entry_specs(count, batch, cache_len, kv_heads, head_dim,
+                   dtype=jnp.bfloat16):
+    return {
+        "k": jax.ShapeDtypeStruct((count, batch, cache_len, kv_heads, head_dim), dtype),
+        "v": jax.ShapeDtypeStruct((count, batch, cache_len, kv_heads, head_dim), dtype),
+        "pos": jax.ShapeDtypeStruct((batch, cache_len), jnp.int32),
+    }
+
+
+def _write_ring(buf: Array, new: Array, start: Array) -> Array:
+    """Write ``new`` (B, C, ...) into ring ``buf`` (B, W, ...) at per-batch
+    slot ``start`` (B,) int32.  Requires C == W, or C | W (no wraparound)."""
+    B, W = buf.shape[0], buf.shape[1]
+    C = new.shape[1]
+    if C >= W:
+        return lax.dynamic_update_slice_in_dim(buf, new[:, -W:], 0, axis=1)
+
+    def upd(b, n, s):
+        return lax.dynamic_update_slice_in_dim(b, n, s, axis=0)
+
+    return jax.vmap(upd)(buf, new, start)
+
+
+def update_kv(entry_k: Array, entry_v: Array, pos: Array,
+              new_k: Array, new_v: Array, q_pos: Array
+              ) -> Tuple[Array, Array, Array]:
+    """Write a chunk into one layer's ring.
+
+    entry_k/v: (B, W, H, dh); pos: (B, W); new_k/v: (B, C, H, dh);
+    q_pos: (B, C) absolute positions of the chunk tokens.
+    """
+    W = entry_k.shape[1]
+    C = new_k.shape[1]
+    start = q_pos[:, 0] % W if C < W else q_pos[:, 0] * 0
+    k2 = _write_ring(entry_k, new_k, start)
+    v2 = _write_ring(entry_v, new_v, start)
+    pos2 = _write_ring(pos, q_pos[:, -W:] if C >= W else q_pos, start)
+    return k2, v2, pos2
+
+
+def cache_len_for(window: int, max_len: int) -> int:
+    from repro.configs.base import GLOBAL_WINDOW
+    if window >= GLOBAL_WINDOW or window <= 0:
+        return max_len
+    return min(window, max_len)
+
+
+# --- recurrent-state entries (xLSTM / Mamba-style) -------------------------
+
+def mlstm_entry(count, batch, heads, dh, dtype=jnp.float32):
+    return {
+        "C": jnp.zeros((count, batch, heads, dh, dh), dtype),
+        "n": jnp.zeros((count, batch, heads, dh), dtype),
+        "m": jnp.full((count, batch, heads), -jnp.inf, dtype),
+    }
+
+
+def slstm_entry(count, batch, heads, dh, dtype=jnp.float32):
+    return {
+        "c": jnp.zeros((count, batch, heads, dh), dtype),
+        "n": jnp.zeros((count, batch, heads, dh), dtype),
+        "h": jnp.zeros((count, batch, heads, dh), dtype),
+        "m": jnp.full((count, batch, heads, dh), -jnp.inf, dtype),
+    }
+
+
+def ssm_entry(count, batch, d_inner, state, conv_taps=3, dtype=jnp.float32):
+    return {
+        "h": jnp.zeros((count, batch, d_inner, state), dtype),
+        "conv": jnp.zeros((count, batch, conv_taps, d_inner), dtype),
+    }

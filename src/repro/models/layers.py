@@ -1,0 +1,175 @@
+"""Shared neural-net layers: norms, RoPE, attention, SwiGLU, chunked xent.
+
+All functions are pure; parameters are plain pytrees of jnp arrays.
+Naming convention for leaves (used by the partition rules in
+``repro.models.partition``):
+
+    emb        (V, D)      token embedding
+    unemb      (D, V)      output projection
+    scale      (D,)        RMSNorm gain
+    wq/wk/wv   (D, H*dh)   attention projections
+    wo         (H*dh, D)   attention output
+    w1/w3      (D, F)      SwiGLU gate/up
+    w2         (F, D)      SwiGLU down
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import GLOBAL_WINDOW
+
+Array = jax.Array
+DEFAULT_DTYPE = jnp.bfloat16
+
+
+# ---------------------------------------------------------------------------
+# Initialisation helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key: Array, shape: Tuple[int, ...],
+               dtype=DEFAULT_DTYPE, scale: Optional[float] = None) -> Array:
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    std = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def rmsnorm_init(d: int, dtype=DEFAULT_DTYPE) -> dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params: dict, x: Array, eps: float = 1e-6) -> Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding
+# ---------------------------------------------------------------------------
+
+def rope(x: Array, positions: Array, theta) -> Array:
+    """Apply RoPE.  x: (B, T, H, dh); positions: (B, T) int32; theta scalar
+    (may be a traced per-layer value)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freq_exp = jnp.arange(half, dtype=jnp.float32) / half
+    inv_freq = jnp.asarray(theta, jnp.float32) ** -freq_exp       # (half,)
+    ang = positions.astype(jnp.float32)[..., None] * inv_freq      # (B,T,half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (XLA path; the Pallas flash kernel replaces this on real TPU)
+# ---------------------------------------------------------------------------
+
+def _attn_chunk(q: Array, k: Array, v: Array, q_pos: Array, k_pos: Array,
+                *, window, causal: bool, scale: float,
+                logits_dtype=jnp.float32) -> Array:
+    """Exact attention for one query chunk.
+
+    q: (B, Tq, Hq, dh); k/v: (B, Tk, Hkv, dh); q_pos: (B, Tq); k_pos: (B, Tk)
+    with -1 marking invalid cache slots.  ``window`` may be a traced scalar;
+    GLOBAL_WINDOW means unbounded.  ``logits_dtype=bf16`` halves the
+    dominant (Tq, Tk) HBM buffer on the XLA path (the flash kernel keeps
+    it out of HBM entirely); softmax math stays fp32 either way.
+    """
+    B, Tq, Hq, dh = q.shape
+    Hkv = k.shape[2]
+    g = Hq // Hkv
+    qg = q.reshape(B, Tq, Hkv, g, dh)
+    logits = jnp.einsum("bqhgd,bshd->bhgqs", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    valid = (k_pos >= 0)[:, None, :]                                # (B,1,Tk)
+    if causal:
+        rel = q_pos[:, :, None] - k_pos[:, None, :]                 # (B,Tq,Tk)
+        mask = valid & (rel >= 0) & (rel < jnp.asarray(window, jnp.int32))
+    else:
+        mask = jnp.broadcast_to(valid, (B, Tq, k.shape[1]))
+    mask = mask[:, None, None]                                      # (B,1,1,Tq,Tk)
+    logits = jnp.where(mask, logits, -1e30).astype(logits_dtype)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    out = jnp.einsum("bhgqs,bshd->bqhgd", probs.astype(v.dtype), v)
+    return out.reshape(B, Tq, Hq, dh)
+
+
+def attention(q: Array, k: Array, v: Array, q_pos: Array, k_pos: Array, *,
+              window=GLOBAL_WINDOW, causal: bool = True,
+              q_chunk: int = 0, logits_dtype=jnp.float32) -> Array:
+    """Exact masked attention with optional query chunking (bounds the
+    (Tq, Tk) logits buffer; same FLOPs, O(q_chunk*Tk) memory)."""
+    B, Tq, Hq, dh = q.shape
+    scale = dh ** -0.5
+    if q_chunk and Tq > q_chunk and Tq % q_chunk == 0:
+        n = Tq // q_chunk
+        qr = jnp.moveaxis(q.reshape(B, n, q_chunk, Hq, dh), 1, 0)
+        pr = jnp.moveaxis(q_pos.reshape(B, n, q_chunk), 1, 0)
+
+        def step(_, xs):
+            qc, pc = xs
+            return None, _attn_chunk(qc, k, v, pc, k_pos, window=window,
+                                     causal=causal, scale=scale,
+                                     logits_dtype=logits_dtype)
+
+        _, out = lax.scan(step, None, (qr, pr))
+        return jnp.moveaxis(out, 0, 1).reshape(B, Tq, Hq, dh)
+    return _attn_chunk(q, k, v, q_pos, k_pos, window=window, causal=causal,
+                       scale=scale, logits_dtype=logits_dtype)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+def swiglu_init(key: Array, d: int, f: int, dtype=DEFAULT_DTYPE) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"w1": dense_init(k1, (d, f), dtype),
+            "w3": dense_init(k2, (d, f), dtype),
+            "w2": dense_init(k3, (f, d), dtype)}
+
+
+def swiglu(params: dict, x: Array) -> Array:
+    h = jax.nn.silu(x @ params["w1"]) * (x @ params["w3"])
+    return h @ params["w2"]
+
+
+# ---------------------------------------------------------------------------
+# Chunked softmax cross-entropy (avoids materialising (B, S, V) logits)
+# ---------------------------------------------------------------------------
+
+def softmax_xent_chunked(h: Array, unemb: Array, labels: Array,
+                         chunk: int = 512) -> Array:
+    """Mean cross-entropy.  h: (B, S, D); unemb: (D, V); labels: (B, S).
+
+    Scans over sequence chunks so only (B, chunk, V) logits are live at a
+    time — the production trick for 200k+ vocabularies."""
+    B, S, D = h.shape
+    chunk = min(chunk, S)
+    if S % chunk:
+        chunk = S  # fall back for odd smoke-test sizes
+    n = S // chunk
+    hr = jnp.moveaxis(h.reshape(B, n, chunk, D), 1, 0)
+    lr = jnp.moveaxis(labels.reshape(B, n, chunk), 1, 0)
+
+    def step(acc, xs):
+        hc, lc = xs
+        logits = (hc @ unemb).astype(jnp.float32)           # (B, chunk, V)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        return acc + jnp.sum(lse - gold), None
+
+    total, _ = lax.scan(step, jnp.zeros((), jnp.float32), (hr, lr))
+    return total / (B * S)
+
+
+def logits_for(h: Array, unemb: Array) -> Array:
+    return (h @ unemb).astype(jnp.float32)

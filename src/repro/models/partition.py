@@ -1,0 +1,227 @@
+"""Partition rules: every parameter / cache / input leaf -> PartitionSpec.
+
+Strategy (see DESIGN.md §8):
+  * tensor parallelism on ``model`` (attention head/feature dims, FFN
+    width, vocab, experts);
+  * optional FSDP over ``data`` (+``pod`` for the >=400B MoEs) on the
+    other weight dim;
+  * batch over (``pod``, ``data``);
+  * decode KV caches: sequence dim over ``model`` (uniform rule — keeps
+    kv_heads < mesh-width archs shardable); batch==1 long-context shards
+    the sequence over (``data``, ``model``).
+
+``fit_spec`` drops any mesh axis that does not divide the corresponding
+dim, so one rule set serves full-size configs, reduced smoke configs and
+any mesh shape.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+
+def mesh_batch_axes(mesh: Mesh, cfg: ArchConfig = None) -> Tuple[str, ...]:
+    """Axes the batch shards over.  Under the 'replicate' strategy the
+    model axis holds no weight shards, so the batch claims it too (pure
+    DP over the whole mesh)."""
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    if cfg is not None and cfg.shard_strategy == "replicate" \
+            and "model" in mesh.axis_names:
+        axes = axes + ("model",)
+    return axes
+
+
+def fsdp_axes_for(cfg: ArchConfig, mesh: Mesh) -> Tuple[str, ...]:
+    if not cfg.use_fsdp or "data" not in mesh.axis_names:
+        return ()
+    axes = ["data"]
+    if cfg.use_pod_fsdp and "pod" in mesh.axis_names:
+        axes.append("pod")
+    return tuple(axes)
+
+
+def expert_fsdp_axes(cfg: ArchConfig, mesh: Mesh) -> Tuple[str, ...]:
+    """FSDP axes that divide the expert FFN width (must match moe_ffn)."""
+    kept = []
+    f = cfg.d_ff
+    for a in fsdp_axes_for(cfg, mesh):
+        sz = mesh.shape[a]
+        if f % sz == 0:
+            kept.append(a)
+            f //= sz
+    return tuple(kept)
+
+
+def fit_spec(shape: Tuple[int, ...], spec: P, mesh: Mesh) -> P:
+    """Drop axis names that do not divide the dim they shard."""
+    out = []
+    for dim, entry in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if entry is None:
+            out.append(None)
+            continue
+        names = entry if isinstance(entry, tuple) else (entry,)
+        kept = []
+        rem = dim
+        for n in names:
+            sz = mesh.shape[n]
+            if rem % sz == 0:
+                kept.append(n)
+                rem //= sz
+        out.append(tuple(kept) if len(kept) > 1 else (kept[0] if kept else None))
+    return P(*out)
+
+
+# ---------------------------------------------------------------------------
+# parameters
+# ---------------------------------------------------------------------------
+
+_COL = {"wq", "wk", "wv", "wg", "w1", "w3", "win", "wi", "wf",
+        "wz", "wo_gates", "conv"}          # (.., D, X): shard X on model
+_ROW = {"wo", "w2", "wout", "wo_out"}      # (.., X, D): shard X on model
+
+
+def _param_rule(path: Tuple[str, ...], shape, cfg: ArchConfig, mesh: Mesh,
+                fsdp, efsdp) -> P:
+    name = None
+    for p in reversed(path):
+        if isinstance(p, str):
+            name = p
+            break
+    nd = len(shape)
+    pad = (None,) * max(0, nd - 2)
+    f = fsdp if fsdp else None
+    ef = efsdp if efsdp else None
+    if name == "emb":
+        return fit_spec(shape, P("model", f), mesh)
+    if name == "unemb":
+        return fit_spec(shape, P(f, "model"), mesh)
+    if name in ("we1", "we3"):
+        return fit_spec(shape, P(*pad[:-1], "model", None, ef), mesh)
+    if name == "we2":
+        return fit_spec(shape, P(*pad[:-1], "model", ef, None), mesh)
+    if name == "wr":
+        return P()
+    if name in ("scale", "dskip", "alog", "gate_attn", "gate_ffn"):
+        return P()
+    if name in ("rz", "ri", "rf", "ro"):
+        return fit_spec(shape, P(*pad, None, "model"), mesh) if nd >= 2 else P()
+    if name in ("wdt", "wbc"):
+        return fit_spec(shape, P(*pad, f, "model"), mesh)
+    if name in _ROW:
+        return fit_spec(shape, P(*pad, "model", f), mesh)
+    if name in _COL or (nd >= 2 and name and name.startswith("w")):
+        return fit_spec(shape, P(*pad, f, "model"), mesh)
+    return P()
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    out = []
+    for k in path:
+        if hasattr(k, "key"):
+            out.append(k.key)
+        elif hasattr(k, "idx"):
+            out.append(str(k.idx))
+        elif hasattr(k, "name"):
+            out.append(k.name)
+    return tuple(out)
+
+
+def param_pspecs(cfg: ArchConfig, abstract_params, mesh: Mesh):
+    fsdp = fsdp_axes_for(cfg, mesh)
+    efsdp = expert_fsdp_axes(cfg, mesh)
+    keep_model = {"emb", "unemb"}
+
+    def rule(path, leaf):
+        names = _path_names(path)
+        spec = _param_rule(names, leaf.shape, cfg, mesh, fsdp, efsdp)
+        if cfg.shard_strategy == "replicate" and \
+                not (names and names[-1] in keep_model):
+            spec = _strip_model(spec)
+        return spec
+
+    return jax.tree_util.tree_map_with_path(rule, abstract_params)
+
+
+def _strip_model(spec: P) -> P:
+    out = []
+    for e in tuple(spec):
+        if e is None:
+            out.append(None)
+        else:
+            names = tuple(n for n in (e if isinstance(e, tuple) else (e,))
+                          if n != "model")
+            out.append(names if len(names) > 1
+                       else (names[0] if names else None))
+    return P(*out)
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+def cache_pspecs(cfg: ArchConfig, cache_specs, mesh: Mesh, batch: int):
+    baxes = mesh_batch_axes(mesh, cfg)
+    bprod = int(np.prod([mesh.shape[a] for a in baxes])) if baxes else 1
+    b_ok = baxes and batch % bprod == 0
+    batch_entry = baxes if b_ok else None
+    if b_ok:
+        seq_entry = None if "model" in baxes else "model"
+    else:
+        seq_entry = tuple(dict.fromkeys(list(baxes) + ["model"]))
+
+    def rule(path, leaf):
+        names = _path_names(path)
+        key = names[-1]
+        nd = len(leaf.shape)
+        if key in ("k", "v"):
+            if nd == 5:
+                return fit_spec(leaf.shape,
+                                P(None, batch_entry, seq_entry, None, None),
+                                mesh)
+            return P()
+        if key == "pos":
+            return fit_spec(leaf.shape, P(batch_entry, seq_entry), mesh)
+        if key == "C":       # mlstm (count,B,H,dh,dh)
+            return fit_spec(leaf.shape,
+                            P(None, batch_entry, None, "model", None), mesh)
+        if key in ("n", "c", "h2", "m"):
+            return fit_spec(leaf.shape,
+                            P(None, batch_entry, None, "model"), mesh)
+        if key == "h":
+            if nd == 4 and leaf.shape[-1] == cfg.ssm_state:
+                # hymba ssm state (count,B,d_inner,state)
+                return fit_spec(leaf.shape,
+                                P(None, batch_entry, "model", None), mesh)
+            return fit_spec(leaf.shape,
+                            P(None, batch_entry, None, "model"), mesh)
+        if key == "conv":
+            return fit_spec(leaf.shape,
+                            P(None, batch_entry, None, "model"), mesh)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(rule, cache_specs)
+
+
+# ---------------------------------------------------------------------------
+# inputs
+# ---------------------------------------------------------------------------
+
+def input_pspecs(cfg: ArchConfig, specs: Dict[str, Any], mesh: Mesh):
+    baxes = mesh_batch_axes(mesh, cfg)
+    b = baxes if baxes else None
+
+    out = {}
+    for k, v in specs.items():
+        spec = P(b, *([None] * (len(v.shape) - 1)))
+        out[k] = fit_spec(v.shape, spec, mesh)
+    return out
+
+
+def shardings_of(pspecs, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                        is_leaf=lambda x: isinstance(x, P))

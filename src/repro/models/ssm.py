@@ -1,0 +1,280 @@
+"""Recurrent blocks: xLSTM (mLSTM + sLSTM) and a Mamba-style selective SSM
+(the Hymba parallel branch).
+
+mLSTM uses the standard *chunkwise-parallel* formulation (intra-chunk
+attention-like term + inter-chunk state carry, log-space stabilised), so
+train/prefill is O(S * L_chunk) matmul work instead of a length-S scan.
+The strictly-sequential scan form lives in ``mlstm_sequential`` and is
+the test oracle.  sLSTM has no parallel form (that is its point — xLSTM
+paper §2.3); it is a `lax.scan` over time.
+
+The selective SSM uses a chunked associative scan (log-depth within a
+chunk, state carried across chunks) which is both compile-compact and
+TPU-friendly.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import dense_init, rmsnorm, rmsnorm_init
+
+Array = jax.Array
+
+
+# ===========================================================================
+# mLSTM
+# ===========================================================================
+
+def mlstm_init(key: Array, d_model: int, heads: int, dh: int,
+               dtype=jnp.bfloat16) -> Dict[str, Array]:
+    ks = jax.random.split(key, 7)
+    q_dim = heads * dh
+    return {
+        "norm": rmsnorm_init(d_model, dtype),
+        "wq": dense_init(ks[0], (d_model, q_dim), dtype),
+        "wk": dense_init(ks[1], (d_model, q_dim), dtype),
+        "wv": dense_init(ks[2], (d_model, q_dim), dtype),
+        "wi": dense_init(ks[3], (d_model, heads), jnp.float32),
+        "wf": dense_init(ks[4], (d_model, heads), jnp.float32),
+        "wg": dense_init(ks[5], (d_model, q_dim), dtype),
+        "wo": dense_init(ks[6], (q_dim, d_model), dtype),
+        "onorm": rmsnorm_init(q_dim, dtype),
+    }
+
+
+def _mlstm_chunk(q, k, v, li, lf, state):
+    """One chunk of the chunkwise-parallel mLSTM.
+
+    q/k/v: (B, H, L, dh) f32; li/lf: (B, H, L) log input gate preact /
+    log-sigmoid forget gate; state: (C (B,H,dh,dh), n (B,H,dh), m (B,H)).
+    Returns (h (B,H,L,dh), new state).
+    """
+    C_in, n_in, m_in = state
+    B, H, L, dh = q.shape
+    b = jnp.cumsum(lf, axis=-1)                          # (B,H,L) inclusive
+    # intra-chunk log scores: g[t,s] = b_t - b_s + li_s  for s <= t
+    g = b[..., :, None] - b[..., None, :] + li[..., None, :]
+    tri = jnp.tril(jnp.ones((L, L), bool))
+    g = jnp.where(tri, g, -jnp.inf)
+    m_intra = jnp.max(g, axis=-1)                        # (B,H,L)
+    m_t = jnp.maximum(m_in[..., None] + b, m_intra)      # (B,H,L)
+    # stabilised intra scores
+    s = jnp.exp(g - m_t[..., None])                      # (B,H,L,L)
+    scale = dh ** -0.5
+    qk = jnp.einsum("bhtd,bhsd->bhts", q, k) * scale
+    w = qk * s
+    inter_coef = jnp.exp(m_in[..., None] + b - m_t)      # (B,H,L)
+    num = jnp.einsum("bhts,bhsd->bhtd", w, v) \
+        + jnp.einsum("bhtd,bhde->bhte", q * inter_coef[..., None] * scale, C_in)
+    den = jnp.sum(w, axis=-1) \
+        + jnp.einsum("bhtd,bhd->bht", q * inter_coef[..., None] * scale, n_in)
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None]
+    # state update
+    bL = b[..., -1]                                      # (B,H)
+    dec = bL[..., None] - b + li                         # (B,H,L)
+    m_out = jnp.maximum(m_in + bL, jnp.max(dec, axis=-1))
+    carry = jnp.exp(m_in + bL - m_out)
+    kv_coef = jnp.exp(dec - m_out[..., None])            # (B,H,L)
+    C_out = C_in * carry[..., None, None] \
+        + jnp.einsum("bhs,bhsd,bhse->bhde", kv_coef, k, v)
+    n_out = n_in * carry[..., None] + jnp.einsum("bhs,bhsd->bhd", kv_coef, k)
+    return h, (C_out, n_out, m_out)
+
+
+def mlstm_forward(params: Dict[str, Array], x: Array, state, *,
+                  heads: int, dh: int, chunk: int = 256,
+                  compute_dtype=jnp.float32) -> Tuple[Array, tuple]:
+    """Full mLSTM block.  x: (B, S, D); state: (C, n, m) or None (=> zeros).
+
+    Returns (residual output (B, S, D), new state).  ``compute_dtype``
+    controls the intra-chunk q/k/v buffers (bf16 halves their HBM
+    traffic; the gate/decay math stays fp32)."""
+    B, S, D = x.shape
+    xn = rmsnorm(params["norm"], x)
+    q = (xn @ params["wq"]).reshape(B, S, heads, dh).transpose(0, 2, 1, 3)
+    k = (xn @ params["wk"]).reshape(B, S, heads, dh).transpose(0, 2, 1, 3)
+    v = (xn @ params["wv"]).reshape(B, S, heads, dh).transpose(0, 2, 1, 3)
+    q = q.astype(compute_dtype)
+    k = k.astype(compute_dtype)
+    v = v.astype(compute_dtype)
+    li = (xn.astype(jnp.float32) @ params["wi"]).transpose(0, 2, 1)  # (B,H,S)
+    lf = jax.nn.log_sigmoid(
+        (xn.astype(jnp.float32) @ params["wf"]).transpose(0, 2, 1))
+    if state is None:
+        state = (jnp.zeros((B, heads, dh, dh), jnp.float32),
+                 jnp.zeros((B, heads, dh), jnp.float32),
+                 jnp.full((B, heads), -jnp.inf, jnp.float32))
+    L = min(chunk, S)
+    if S % L:
+        L = S
+    n = S // L
+
+    def step(st, xs):
+        qc, kc, vc, lic, lfc = xs
+        h, st2 = _mlstm_chunk(qc, kc, vc, lic, lfc, st)
+        return st2, h
+
+    xs = tuple(jnp.moveaxis(a.reshape(B, heads, n, L, -1).squeeze(-1)
+                            if a.ndim == 3 else a.reshape(B, heads, n, L, dh),
+                            2, 0)
+               for a in (q, k, v, li, lf))
+    state, hs = lax.scan(step, state, xs)
+    h = jnp.moveaxis(hs, 0, 2).reshape(B, heads, S, dh)
+    h = h.transpose(0, 2, 1, 3).reshape(B, S, heads * dh).astype(x.dtype)
+    h = rmsnorm(params["onorm"], h)
+    gate = jax.nn.sigmoid((xn @ params["wg"]).astype(jnp.float32))
+    y = (h.astype(jnp.float32) * gate).astype(x.dtype) @ params["wo"]
+    return x + y, state
+
+
+def mlstm_sequential(params, x, state, *, heads, dh):
+    """Step-by-step oracle for tests (identical math, L=1 chunks)."""
+    return mlstm_forward(params, x, state, heads=heads, dh=dh, chunk=1)
+
+
+# ===========================================================================
+# sLSTM
+# ===========================================================================
+
+def slstm_init(key: Array, d_model: int, heads: int, dh: int,
+               dtype=jnp.bfloat16) -> Dict[str, Array]:
+    ks = jax.random.split(key, 10)
+    q_dim = heads * dh
+    p = {"norm": rmsnorm_init(d_model, dtype)}
+    for i, g in enumerate(("z", "i", "f", "o")):
+        p[f"w{g}"] = dense_init(ks[i], (d_model, q_dim), jnp.float32)
+        p[f"r{g}"] = dense_init(ks[4 + i], (heads, dh, dh), jnp.float32,
+                                scale=dh ** -0.5)
+    p["wo_out"] = dense_init(ks[8], (q_dim, d_model), dtype)
+    p["onorm"] = rmsnorm_init(q_dim, dtype)
+    return p
+
+
+def slstm_forward(params: Dict[str, Array], x: Array, state, *,
+                  heads: int, dh: int, compute_dtype=jnp.float32
+                  ) -> Tuple[Array, tuple]:
+    """sLSTM block — strictly sequential exponential-gated LSTM with
+    per-head recurrent mixing.  x: (B, S, D).  ``compute_dtype=bf16``
+    halves the per-timestep recurrent-weight reads (gate math stays
+    fp32)."""
+    B, S, D = x.shape
+    xn = rmsnorm(params["norm"], x).astype(jnp.float32)
+    pre = {g: (xn @ params[f"w{g}"]).reshape(B, S, heads, dh)
+           for g in ("z", "i", "f", "o")}
+    rec_w = {g: params[f"r{g}"].astype(compute_dtype)
+             for g in ("z", "i", "f", "o")}
+    if state is None:
+        state = (jnp.zeros((B, heads, dh), jnp.float32),
+                 jnp.zeros((B, heads, dh), jnp.float32),
+                 jnp.zeros((B, heads, dh), jnp.float32),
+                 jnp.full((B, heads, dh), -jnp.inf, jnp.float32))
+
+    def step(st, xs):
+        c, n, h, m = st
+        zx, ix, fx, ox = xs                              # each (B, H, dh)
+        hc = h.astype(compute_dtype)
+        rec = {g: jnp.einsum("bhd,hde->bhe", hc, rec_w[g]
+                             ).astype(jnp.float32)
+               for g in ("z", "i", "f", "o")}
+        z = jnp.tanh(zx + rec["z"])
+        li = ix + rec["i"]                                # log input gate
+        lf = jax.nn.log_sigmoid(fx + rec["f"])            # log forget gate
+        o = jax.nn.sigmoid(ox + rec["o"])
+        m2 = jnp.maximum(lf + m, li)
+        ig = jnp.exp(li - m2)
+        fg = jnp.exp(lf + m - m2)
+        c2 = fg * c + ig * z
+        n2 = fg * n + ig
+        h2 = o * c2 / jnp.maximum(n2, 1e-6)
+        return (c2, n2, h2, m2), h2
+
+    xs = tuple(jnp.moveaxis(pre[g], 1, 0) for g in ("z", "i", "f", "o"))
+    state, hs = lax.scan(step, state, xs)
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, S, heads * dh).astype(x.dtype)
+    h = rmsnorm(params["onorm"], h)
+    return x + h @ params["wo_out"], state
+
+
+# ===========================================================================
+# Selective SSM (Hymba's Mamba-style branch)
+# ===========================================================================
+
+def ssm_init(key: Array, d_model: int, d_inner: int, state: int,
+             dtype=jnp.bfloat16) -> Dict[str, Array]:
+    ks = jax.random.split(key, 6)
+    return {
+        "win": dense_init(ks[0], (d_model, 2 * d_inner), dtype),
+        "conv": dense_init(ks[1], (4, d_inner), jnp.float32, scale=0.5),
+        "wdt": dense_init(ks[2], (d_inner, d_inner), jnp.float32,
+                          scale=d_inner ** -0.5),
+        "wbc": dense_init(ks[3], (d_inner, 2 * state), jnp.float32),
+        "alog": jnp.log(jnp.arange(1, state + 1, dtype=jnp.float32)
+                        )[None, :].repeat(d_inner, 0),      # (d_inner, state)
+        "dskip": jnp.ones((d_inner,), jnp.float32),
+        "wout": dense_init(ks[4], (d_inner, d_model), dtype),
+    }
+
+
+def _ssm_scan_chunked(a: Array, b: Array, h0: Array, chunk: int):
+    """Linear recurrence h_t = a_t * h_{t-1} + b_t via chunked associative
+    scan.  a/b: (B, S, d, state) f32; h0: (B, d, state)."""
+    B, S, d, st = a.shape
+    L = min(chunk, S)
+    if S % L:
+        L = S
+    n = S // L
+    ar = jnp.moveaxis(a.reshape(B, n, L, d, st), 1, 0)
+    br = jnp.moveaxis(b.reshape(B, n, L, d, st), 1, 0)
+
+    def combine(x, y):
+        (ax, bx), (ay, by) = x, y
+        return ax * ay, ay * bx + by
+
+    def step(h, xs):
+        ac, bc = xs
+        aa, bb = lax.associative_scan(combine, (ac, bc), axis=1)
+        hs = aa * h[:, None] + bb                        # (B, L, d, state)
+        return hs[:, -1], hs
+
+    hN, hs = lax.scan(step, h0, (ar, br))
+    return jnp.moveaxis(hs, 0, 1).reshape(B, S, d, st), hN
+
+
+def ssm_forward(params: Dict[str, Array], xn: Array, state_cache, *,
+                d_inner: int, state: int, chunk: int = 512,
+                scan_dtype=jnp.float32) -> Tuple[Array, tuple]:
+    """Selective-SSM branch.  xn: (B, S, D) already normalised.
+    state_cache: (h (B,d_inner,state), conv (B,3,d_inner)) or None.
+    Returns (branch output (B, S, D), new state_cache)."""
+    B, S, D = xn.shape
+    xi, z = jnp.split(xn @ params["win"], 2, axis=-1)
+    xi32 = xi.astype(jnp.float32)
+    if state_cache is None:
+        h0 = jnp.zeros((B, d_inner, state), jnp.float32)
+        conv_in = jnp.zeros((B, 3, d_inner), jnp.float32)
+    else:
+        h0, conv_in = state_cache[0], state_cache[1]
+    xc = jnp.concatenate([conv_in, xi32], axis=1)        # (B, S+3, d)
+    taps = params["conv"]                                # (4, d)
+    xconv = sum(xc[:, i:i + S] * taps[i] for i in range(4))
+    xconv = jax.nn.silu(xconv)                           # (B, S, d)
+    new_conv = xc[:, -3:]
+
+    dt = jax.nn.softplus(xconv @ params["wdt"])          # (B, S, d)
+    bc = xconv @ params["wbc"]
+    Bm, Cm = jnp.split(bc, 2, axis=-1)                   # (B, S, state)
+    A = -jnp.exp(params["alog"])                         # (d, state)
+    a = jnp.exp(dt[..., None] * A).astype(scan_dtype)    # (B,S,d,state)
+    bterm = ((dt * xconv)[..., None]
+             * Bm[:, :, None, :]).astype(scan_dtype)
+    hs, hN = _ssm_scan_chunked(a, bterm, h0.astype(scan_dtype), chunk)
+    hN = hN.astype(jnp.float32)
+    y = jnp.einsum("bsdn,bsn->bsd", hs.astype(jnp.float32), Cm) \
+        + params["dskip"] * xconv
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    out = y.astype(xn.dtype) @ params["wout"]
+    return out, (hN, new_conv)

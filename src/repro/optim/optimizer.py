@@ -1,0 +1,185 @@
+"""Optimizers implemented from scratch (no optax in this environment):
+AdamW and factored Adafactor (for the >=400B MoEs where full Adam state
+would not fit a 256-chip pod), plus global-norm clipping and a
+warmup-cosine schedule.
+
+State pytrees mirror the parameter tree leaf-for-leaf so the partition
+specs derive mechanically from the parameter specs (``opt_pspecs``):
+Adam moments inherit the param spec; Adafactor's factored moments drop
+the reduced dim's spec entry — i.e. optimizer state is sharded exactly
+as far as the parameters are (ZeRO-style when FSDP is on).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "adamw"
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    # adafactor
+    decay_rate: float = 0.8
+    momentum: bool = False
+
+
+def warmup_cosine(cfg: OptimizerConfig, step: Array) -> Array:
+    step = step.astype(jnp.float32)
+    warm = cfg.peak_lr * step / max(cfg.warmup_steps, 1)
+    frac = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * cfg.peak_lr * (1 + jnp.cos(jnp.pi * frac))
+    return jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def global_norm(tree) -> Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda x: (x.astype(jnp.float32) * scale
+                                   ).astype(x.dtype), tree), norm
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(cfg: OptimizerConfig, grads, state, params, lr: Array):
+    c = state["count"] + 1
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** c.astype(jnp.float32)
+    bc2 = 1 - b2 ** c.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32)
+        m2 = b1 * m + (1 - b1) * g
+        v2 = b2 * v + (1 - b2) * g * g
+        step = (m2 / bc1) / (jnp.sqrt(v2 / bc2) + cfg.eps)
+        step = step + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step).astype(p.dtype), m2, v2
+
+    p_l, tdef = jax.tree.flatten(params)
+    g_l = tdef.flatten_up_to(grads)
+    m_l = tdef.flatten_up_to(state["m"])
+    v_l = tdef.flatten_up_to(state["v"])
+    res = [upd(g, m, v, p) for g, m, v, p in zip(g_l, m_l, v_l, p_l)]
+    new_params = tdef.unflatten([r[0] for r in res])
+    m = tdef.unflatten([r[1] for r in res])
+    v = tdef.unflatten([r[2] for r in res])
+    return new_params, {"m": m, "v": v, "count": c}
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moments over the last two dims)
+# ---------------------------------------------------------------------------
+
+def _factored(p) -> bool:
+    return p.ndim >= 2 and p.shape[-1] >= 2 and p.shape[-2] >= 2
+
+
+def adafactor_init(params):
+    def slot(p):
+        if _factored(p):
+            return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+    return {"slots": jax.tree.map(slot, params),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def adafactor_update(cfg: OptimizerConfig, grads, state, params, lr: Array):
+    c = state["count"] + 1
+    beta2 = 1.0 - c.astype(jnp.float32) ** -cfg.decay_rate
+
+    def upd(g, slot, p):
+        g = g.astype(jnp.float32)
+        g2 = g * g + 1e-30
+        if _factored(p):
+            vr = beta2 * slot["vr"] + (1 - beta2) * jnp.mean(g2, axis=-1)
+            vc = beta2 * slot["vc"] + (1 - beta2) * jnp.mean(g2, axis=-2)
+            denom = jnp.mean(vr, axis=-1, keepdims=True)
+            rhat = vr / jnp.maximum(denom, 1e-30)
+            u = g / (jnp.sqrt(rhat)[..., None] * jnp.sqrt(vc)[..., None, :]
+                     + 1e-30)
+            new_slot = {"vr": vr, "vc": vc}
+        else:
+            v = beta2 * slot["v"] + (1 - beta2) * g2
+            u = g / (jnp.sqrt(v) + 1e-30)
+            new_slot = {"v": v}
+        # RMS-based update clipping (Adafactor d=1)
+        rms = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+        u = u / jnp.maximum(1.0, rms)
+        u = u + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype), new_slot
+
+    p_l, tdef = jax.tree.flatten(params)
+    g_l = tdef.flatten_up_to(grads)
+    s_l = tdef.flatten_up_to(state["slots"])
+    res = [upd(g, s, p) for g, s, p in zip(g_l, s_l, p_l)]
+    new_params = tdef.unflatten([r[0] for r in res])
+    slots = tdef.unflatten([r[1] for r in res])
+    return new_params, {"slots": slots, "count": c}
+
+
+# ---------------------------------------------------------------------------
+# facade + partition specs
+# ---------------------------------------------------------------------------
+
+def opt_init(cfg: OptimizerConfig, params):
+    return adafactor_init(params) if cfg.name == "adafactor" \
+        else adamw_init(params)
+
+
+def opt_update(cfg: OptimizerConfig, grads, state, params, step: Array):
+    lr = warmup_cosine(cfg, step)
+    if cfg.name == "adafactor":
+        return adafactor_update(cfg, grads, state, params, lr)
+    return adamw_update(cfg, grads, state, params, lr)
+
+
+def opt_pspecs(cfg: OptimizerConfig, param_pspecs, abstract_params):
+    def full(spec):
+        return spec
+
+    if cfg.name != "adafactor":
+        return {"m": jax.tree.map(full, param_pspecs,
+                                  is_leaf=lambda x: isinstance(x, P)),
+                "v": jax.tree.map(full, param_pspecs,
+                                  is_leaf=lambda x: isinstance(x, P)),
+                "count": P()}
+
+    def slot_spec(spec, p):
+        t = tuple(spec) + (None,) * (p.ndim - len(tuple(spec)))
+        if _factored(p):
+            return {"vr": P(*t[:-1]), "vc": P(*t[:-2], t[-1])}
+        return {"v": P(*t[:p.ndim])}
+
+    slots = jax.tree.map(slot_spec, param_pspecs, abstract_params,
+                         is_leaf=lambda x: isinstance(x, P))
+    return {"slots": slots, "count": P()}

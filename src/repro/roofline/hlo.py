@@ -1,0 +1,276 @@
+"""Mini HLO analyzer for the roofline.
+
+``compiled.cost_analysis()`` visits a while-loop body ONCE, but every
+layer stack / microbatch loop / prefill chunk loop in this framework is a
+`lax.scan` → XLA `while`, so raw cost numbers undercount by the trip
+count.  This module parses the optimized HLO text into computations,
+extracts while-loop trip counts (scan bounds are integer constants in the
+loop condition), and propagates multipliers through the call graph to
+produce loop-adjusted:
+
+  * dot FLOPs        (2 * prod(result dims) * contraction size)
+  * memory traffic   (sum of operand + result bytes of every non-trivial
+                      instruction — post-fusion, so roughly HBM traffic)
+  * collective bytes (per op kind, converted to per-device link bytes
+                      with ring-algorithm factors, split ICI vs
+                      cross-pod DCI)
+
+All numbers are per-device (the HLO module is the SPMD per-device
+program).  This is text-level analysis — a documented approximation, not
+an XLA-internal cost model; EXPERIMENTS.md §Roofline records the
+methodology.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s+\(")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_CALL_RE = re.compile(r"(?:body|condition|calls|to_apply)=%?([\w\.\-]+)")
+_LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+
+COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter",
+                  "all-to-all", "collective-permute")
+_SKIP_BYTES_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+                   "bitcast", "after-all", "iota", "broadcast",
+                   "partition-id", "replica-id"}
+
+
+def _shape_list(type_str: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype in _DTYPE_BYTES:
+            out.append((dtype, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _shape_list(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str                   # operands + attrs (raw tail of the line)
+    bytes_out: int
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: List[Instr] = dataclasses.field(default_factory=list)
+    is_entry: bool = False
+
+
+def parse_module(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        s = line.strip()
+        if cur is None:
+            if s.endswith("{") and "->" in s and " = " not in s:
+                m = _COMP_HDR_RE.match(s)
+                if m:
+                    cur = Computation(m.group(2), is_entry=bool(m.group(1)))
+            continue
+        if s == "}" or s.startswith("}"):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _INSTR_RE.match(s)
+        if m:
+            name, type_str, opcode, rest = m.groups()
+            cur.instrs.append(
+                Instr(name, type_str, opcode, rest, _type_bytes(type_str)))
+    if cur is not None:
+        comps[cur.name] = cur
+    return comps
+
+
+def _trip_count(cond: Computation) -> int:
+    """Scan bound = the max integer constant in the loop condition."""
+    best = 1
+    for ins in cond.instrs:
+        if ins.opcode == "constant":
+            m = re.match(r"([\-\d]+)", ins.rest)
+            if m:
+                try:
+                    best = max(best, int(m.group(1)))
+                except ValueError:
+                    pass
+    return best
+
+
+def _dot_flops(ins: Instr, symtab: Dict[str, Instr], params: Dict[str, int],
+               shapes: Dict[str, List[int]]) -> float:
+    res_dims = _shape_list(ins.type_str)
+    n_out = 1
+    for _, dims in res_dims[:1]:
+        for d in dims:
+            n_out *= d
+    m = _LHS_CONTRACT_RE.search(ins.rest)
+    contract = 1
+    ops = _OPERAND_RE.findall(ins.rest.split(",")[0] + ","
+                              + ins.rest.split(")")[0])
+    lhs_shape = shapes.get(ops[0]) if ops else None
+    if m and lhs_shape is not None:
+        for idx in (int(i) for i in m.group(1).split(",") if i):
+            if idx < len(lhs_shape):
+                contract *= lhs_shape[idx]
+    return 2.0 * n_out * contract
+
+
+@dataclasses.dataclass
+class Stats:
+    dot_flops: float = 0.0
+    bytes: float = 0.0
+    collectives: Dict[str, Dict[str, float]] = dataclasses.field(
+        default_factory=dict)
+
+    def add_collective(self, op, count, result_bytes, link, dci, mult=1.0):
+        d = self.collectives.setdefault(
+            op, {"count": 0.0, "result_bytes": 0.0, "link_bytes": 0.0,
+                 "dci_link_bytes": 0.0})
+        d["count"] += count * mult
+        d["result_bytes"] += result_bytes * mult
+        d["link_bytes"] += link * mult
+        d["dci_link_bytes"] += dci * mult
+
+
+def _group_size(rest: str) -> int:
+    m = _GROUPS_RE.search(rest)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(rest)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip()])
+    return 0
+
+
+def _collective_link_bytes(op: str, b: float, n: int) -> float:
+    n = max(n, 2)
+    if op == "all-gather":
+        return (n - 1) / n * b
+    if op == "reduce-scatter":
+        return (n - 1) * b
+    if op == "all-reduce":
+        return 2 * (n - 1) / n * b
+    if op == "all-to-all":
+        return (n - 1) / n * b
+    return float(b)
+
+
+def _crosses_pod(rest: str, n: int, pod_size: int, n_pods: int) -> bool:
+    """Heuristic: a replica group spans pods iff its size is n_pods (pure
+    pod-axis collective) or the full device count."""
+    if n_pods <= 1:
+        return False
+    total = pod_size * n_pods
+    return n == n_pods or n >= total
+
+
+def analyze(text: str, pod_size: int = 256, n_pods: int = 1
+            ) -> Dict[str, object]:
+    comps = parse_module(text)
+    entry = next((c for c in comps.values() if c.is_entry), None)
+    if entry is None:
+        return {"dot_flops": 0.0, "bytes": 0.0, "collectives": {},
+                "loops": []}
+
+    # global symbol/shape table (names are unique module-wide in practice)
+    shapes: Dict[str, List[int]] = {}
+    bytes_of: Dict[str, int] = {}
+    for c in comps.values():
+        for ins in c.instrs:
+            sl = _shape_list(ins.type_str)
+            if sl:
+                shapes[ins.name] = sl[0][1]
+            bytes_of[ins.name] = ins.bytes_out
+
+    stats = Stats()
+    loops: List[Tuple[str, int]] = []
+
+    def visit(comp: Computation, mult: float, seen: Tuple[str, ...]):
+        if comp.name in seen:
+            return
+        for ins in comp.instrs:
+            if ins.opcode == "while":
+                calls = _CALL_RE.findall(ins.rest)
+                body = cond = None
+                mbody = re.search(r"body=%?([\w\.\-]+)", ins.rest)
+                mcond = re.search(r"condition=%?([\w\.\-]+)", ins.rest)
+                body = comps.get(mbody.group(1)) if mbody else None
+                cond = comps.get(mcond.group(1)) if mcond else None
+                trips = _trip_count(cond) if cond else 1
+                loops.append((ins.name, trips))
+                if body is not None:
+                    visit(body, mult * trips, seen + (comp.name,))
+                continue
+            if ins.opcode in ("fusion", "call", "conditional"):
+                # traverse for dot flops only (bytes counted at call site)
+                for cname in _CALL_RE.findall(ins.rest):
+                    sub = comps.get(cname)
+                    if sub is not None and sub.name != comp.name:
+                        for sins in sub.instrs:
+                            if sins.opcode == "dot":
+                                stats.dot_flops += mult * _dot_flops(
+                                    sins, {}, {}, shapes)
+            if ins.opcode == "dot":
+                stats.dot_flops += mult * _dot_flops(ins, {}, {}, shapes)
+            if ins.opcode.startswith(tuple(COLLECTIVE_OPS)) \
+                    and not ins.opcode.endswith("-done"):
+                op = next(o for o in COLLECTIVE_OPS
+                          if ins.opcode.startswith(o))
+                b = ins.bytes_out
+                n = _group_size(ins.rest)
+                link = _collective_link_bytes(op, b, n)
+                dci = link if _crosses_pod(ins.rest, n, pod_size, n_pods) \
+                    else 0.0
+                stats.add_collective(op, 1, b, link, dci, mult)
+            if ins.opcode not in _SKIP_BYTES_OPS:
+                b = ins.bytes_out
+                # operand reads (first parenthesised group of the tail)
+                tail = ins.rest.split(")")[0]
+                for ref in _OPERAND_RE.findall(tail):
+                    b += bytes_of.get(ref, 0)
+                stats.bytes += mult * b
+
+    visit(entry, 1.0, ())
+    link = sum(d["link_bytes"] for d in stats.collectives.values())
+    dci = sum(d["dci_link_bytes"] for d in stats.collectives.values())
+    return {"dot_flops": stats.dot_flops, "bytes": stats.bytes,
+            "collectives": stats.collectives, "link_bytes": link,
+            "dci_link_bytes": dci, "loops": loops}
+
+
+# Back-compat helpers used by the dry-run
+def parse_collectives(text: str, pod_boundary: int = 256):
+    return analyze(text)["collectives"]
+
+
+def totals(colls) -> Tuple[float, float]:
+    link = sum(d["link_bytes"] for d in colls.values())
+    dci = sum(d["dci_link_bytes"] for d in colls.values())
+    return link, dci

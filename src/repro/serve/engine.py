@@ -1,0 +1,145 @@
+"""Serving engine: chunked prefill + batched decode with slot management.
+
+A light continuous-batching engine over the Model API:
+  * fixed number of ``slots`` (the decode batch);
+  * requests are admitted into free slots; prefill runs chunked (bounded
+    activation footprint — the same ``extend`` path the dry-run lowers);
+  * one jit'd decode step advances every active slot by a token;
+  * per-slot positions mean requests of different lengths coexist (the
+    cache machinery masks by true token positions);
+  * greedy or temperature sampling with an explicit PRNG key.
+
+The multi-host production layout shards slots over the batch axes and
+the KV cache per partition.py; this engine is what examples/serve_lm.py
+and the decode benchmarks drive.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.configs.base import ArchConfig
+from repro.models.model import Model
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # (prompt_len,) int32
+    max_new_tokens: int = 16
+    temperature: float = 0.0
+    out_tokens: Optional[List[int]] = None
+
+
+class Engine:
+    def __init__(self, cfg: ArchConfig, mesh: Mesh, slots: int,
+                 max_len: int, seed: int = 0):
+        self.cfg = cfg
+        self.model = Model(cfg, mesh)
+        self.slots = slots
+        self.max_len = max_len
+        self.params = None
+        self.key = jax.random.PRNGKey(seed)
+        self._decode = jax.jit(self.model.decode_step)
+        self._extend = jax.jit(self.model.extend, static_argnames=())
+        self.cache = None
+        self.positions = np.zeros((slots,), np.int32)
+        self.active = np.zeros((slots,), bool)
+        self.requests: Dict[int, Request] = {}
+        self.slot_of: Dict[int, int] = {}
+
+    def load(self, params) -> None:
+        self.params = params
+        self.cache = self.model.init_cache(self.slots, self.max_len)
+
+    # ------------------------------------------------------------- admit
+    def _scatter_slot(self, big, one, slot: int):
+        """Write a batch=1 cache into batch slot ``slot`` of the engine
+        cache.  'pos' leaves carry batch at dim 0, tensor leaves at dim 1."""
+        def put(b, o):
+            if b.ndim == o.ndim and o.shape[0] == 1 and b.shape[0] == self.slots:
+                return b.at[slot].set(o[0])            # pos: (B, W)
+            return b.at[:, slot].set(o[:, 0])          # (count, B, ...)
+        return jax.tree.map(put, big, one)
+
+    def admit(self, req: Request) -> bool:
+        """Prefill the request in an isolated batch=1 cache (chunked, with
+        a single-token tail), then scatter it into a free slot."""
+        free = np.where(~self.active)[0]
+        if free.size == 0:
+            return False
+        slot = int(free[0])
+        self.active[slot] = True
+        self.requests[req.rid] = req
+        self.slot_of[req.rid] = slot
+        req.out_tokens = []
+        prompt = req.prompt.astype(np.int32)
+        chunk = self.cfg.prefill_chunk
+        cache1 = self.model.init_cache(1, self.max_len)
+        pos = 0
+        while pos < len(prompt):
+            n = chunk if len(prompt) - pos >= chunk else 1
+            tok = jnp.asarray(prompt[pos:pos + n][None])
+            start = jnp.asarray([pos], jnp.int32)
+            _, cache1 = self._extend(self.params, tok, start, cache1, {})
+            pos += n
+        self.cache = self._scatter_slot(self.cache, cache1, slot)
+        self.positions[slot] = len(prompt)
+        return True
+
+    # ------------------------------------------------------------- decode
+    def step(self) -> Dict[int, int]:
+        """One decode step for all active slots; returns {rid: token}."""
+        if not self.active.any():
+            return {}
+        tok = np.zeros((self.slots, 1), np.int32)
+        for rid, slot in self.slot_of.items():
+            req = self.requests[rid]
+            prev = req.out_tokens[-1] if req.out_tokens else \
+                int(req.prompt[-1])
+            tok[slot, 0] = prev
+        logits, self.cache = self._decode(
+            self.params, jnp.asarray(tok), jnp.asarray(self.positions),
+            self.cache)
+        out: Dict[int, int] = {}
+        logits = np.asarray(logits[:, -1].astype(jnp.float32))
+        done: List[int] = []
+        for rid, slot in self.slot_of.items():
+            req = self.requests[rid]
+            if req.temperature > 0:
+                self.key, sub = jax.random.split(self.key)
+                nxt = int(jax.random.categorical(
+                    sub, jnp.asarray(logits[slot]) / req.temperature))
+            else:
+                nxt = int(logits[slot].argmax())
+            req.out_tokens.append(nxt)
+            self.positions[slot] += 1
+            out[rid] = nxt
+            if len(req.out_tokens) >= req.max_new_tokens \
+                    or self.positions[slot] >= self.max_len - 1:
+                done.append(rid)
+        for rid in done:
+            slot = self.slot_of.pop(rid)
+            self.active[slot] = False
+            self.positions[slot] = 0
+        return out
+
+    def run_to_completion(self, reqs: List[Request], max_steps: int = 10_000
+                          ) -> Dict[int, List[int]]:
+        pending = list(reqs)
+        results: Dict[int, List[int]] = {}
+        steps = 0
+        while (pending or self.slot_of) and steps < max_steps:
+            while pending and self.admit(pending[0]):
+                pending.pop(0)
+            self.step()
+            steps += 1
+            for rid in list(self.requests):
+                if rid not in self.slot_of:
+                    results[rid] = self.requests.pop(rid).out_tokens
+        return results

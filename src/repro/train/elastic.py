@@ -1,0 +1,48 @@
+"""Elastic re-meshing: continue training after losing hosts.
+
+The recovery path for "node failure at 1000-chip scale" is:
+  1. the watchdog / runtime detects the loss and the job restarts on the
+     surviving device set;
+  2. ``shrink_mesh`` factors the survivors into the largest (data, model)
+     mesh that preserves the model-parallel width (TP width is a property
+     of the checkpoint math, data width is free);
+  3. the latest checkpoint is restored with the NEW mesh's shardings —
+     redistribution between the old and new layouts is exactly a
+     resharded load (and, in PGAS terms, a Dmap redistribute);
+  4. the batch axes shrink, so ``effective_microbatches`` grows to keep
+     the global batch (and thus the training trajectory) identical.
+
+On this CPU container the "failure" is simulated by rebuilding a smaller
+virtual mesh; the mechanism (shrink + resharded restore + microbatch
+rescale) is the production path.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.checkpoint import checkpoint as ckpt_lib
+
+
+def shrink_mesh(n_devices: int, model_width: int,
+                devices: Optional[Sequence] = None) -> Mesh:
+    """Largest (data, model) mesh over ``n_devices`` surviving devices
+    that keeps the model axis width (required: checkpoint TP layout)."""
+    devs = list(devices if devices is not None else jax.devices())[:n_devices]
+    data = len(devs) // model_width
+    assert data >= 1, "not enough survivors for the TP width"
+    devs = devs[: data * model_width]
+    arr = np.array(devs).reshape(data, model_width)
+    return Mesh(arr, ("data", "model"))
+
+
+def remesh_restore(ckpt_dir: str, abstract_tree, new_shardings):
+    """Restore LATEST under the new mesh's shardings."""
+    step = ckpt_lib.latest_step(ckpt_dir)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+    tree = ckpt_lib.restore(ckpt_dir, step, abstract_tree, new_shardings)
+    return step, tree

@@ -1,0 +1,172 @@
+"""jit-able step functions: train (with microbatch gradient accumulation),
+prefill and decode.  These are what the launcher jits and the dry-run
+lowers; the Trainer loop wraps them with checkpointing/fault handling.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeSpec, input_specs
+from repro.models import partition
+from repro.models.model import Model
+from repro.optim.optimizer import (OptimizerConfig, clip_by_global_norm,
+                                   opt_init, opt_pspecs, opt_update)
+
+
+def effective_microbatches(cfg: ArchConfig, global_batch: int,
+                           mesh: Mesh) -> int:
+    """Largest mb count <= cfg.microbatches such that each microbatch still
+    divides over the batch mesh axes."""
+    baxes = partition.mesh_batch_axes(mesh, cfg)
+    bprod = 1
+    for a in baxes:
+        bprod *= mesh.shape[a]
+    mb = min(cfg.microbatches, max(1, global_batch // max(bprod, 1)))
+    while global_batch % mb or (global_batch // mb) % bprod:
+        mb -= 1
+        if mb <= 1:
+            return 1
+    return mb
+
+
+def make_train_step(model: Model, ocfg: OptimizerConfig,
+                    global_batch: int, grad_comms: str = "auto"):
+    """Returns train_step(params, opt_state, batch, step) ->
+    (params, opt_state, metrics).
+
+    ``grad_comms`` selects the data-parallel gradient exchange:
+      * ``auto``      — GSPMD inserts flat all-reduces (mpi4py analogue);
+      * ``tree``      — paper-faithful: per-shard grads computed inside
+                        shard_map (model axis left automatic) and summed
+                        with the two-level binary-tree agg+bcast;
+      * ``hier``      — beyond-paper reduce-scatter hierarchy;
+      * ``hier_int8`` — hier with int8 cross-pod compression.
+    The explicit modes require non-FSDP params (replicated over the batch
+    axes); FSDP archs keep 'auto' (their grads are sharded, and GSPMD's
+    reduce-scatter is already the hierarchy).
+    """
+    cfg = model.cfg
+    mesh = model.mesh
+    mb = effective_microbatches(cfg, global_batch, model.mesh)
+    explicit = grad_comms in ("tree", "hier", "hier_int8")
+    if explicit and cfg.use_fsdp:
+        raise ValueError("explicit grad_comms needs replicated (non-FSDP) "
+                         "params; use grad_comms='auto' for FSDP archs")
+
+    def loss_fn(params, mbatch):
+        return model.train_loss(params, mbatch)
+
+    if explicit:
+        from jax import shard_map
+        from repro.comms import backend as backend_lib
+        baxes = partition.mesh_batch_axes(mesh, cfg)
+        pod = "pod" if "pod" in mesh.axis_names else None
+        in_ax = tuple(a for a in baxes if a != "pod")
+        nshards = 1
+        for a in baxes:
+            nshards *= mesh.shape[a]
+        be = backend_lib.for_name(
+            {"tree": "tree", "hier": "hier", "hier_int8": "hier_int8"}
+            [grad_comms], pod, in_ax)
+
+        def local_grad(params, mbatch):
+            (loss, _), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, mbatch)
+            g = jax.tree.map(lambda t: be.allreduce(t.astype(jnp.float32))
+                             / nshards, g)
+            loss = be.allreduce(loss) / nshards
+            return loss, g
+
+        batch_specs = {k: P(baxes, None) for k in ("tokens", "labels")}
+
+        def grad_of(params, mbatch):
+            # manual over the batch axes; model/TP axes stay automatic
+            return shard_map(
+                local_grad, mesh=mesh,
+                in_specs=(P(), batch_specs),
+                out_specs=(P(), P()),
+                axis_names=set(baxes),
+                check_vma=False)(params, mbatch)
+    else:
+        def grad_of(params, mbatch):
+            (loss, _), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, mbatch)
+            return loss, g
+
+    def train_step(params, opt_state, batch, step):
+        def reshape(x):
+            return x.reshape((mb, x.shape[0] // mb) + x.shape[1:])
+
+        mbatches = jax.tree.map(reshape, batch)
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                             params)
+
+        def mb_step(acc, mbatch):
+            loss_acc, grad_acc = acc
+            loss, grads = grad_of(params, mbatch)
+            grad_acc = jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32), grad_acc, grads)
+            return (loss_acc + loss, grad_acc), ()
+
+        (loss_sum, grads), _ = lax.scan(mb_step, (0.0, zeros), mbatches)
+        grads = jax.tree.map(lambda g: g / mb, grads)
+        grads, gnorm = clip_by_global_norm(grads, ocfg.clip_norm)
+        params, opt_state = opt_update(ocfg, grads, opt_state, params, step)
+        metrics = {"loss": loss_sum / mb, "grad_norm": gnorm,
+                   "lr": jnp.zeros((), jnp.float32)}
+        return params, opt_state, metrics
+
+    return train_step, mb
+
+
+def make_prefill_step(model: Model):
+    def prefill_step(params, tokens, extras):
+        return model.prefill(params, tokens, extras)
+    return prefill_step
+
+
+def make_decode_step(model: Model):
+    def decode_step(params, tokens, positions, cache):
+        return model.decode_step(params, tokens, positions, cache)
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# sharding bundles used by launcher + dry-run
+# ---------------------------------------------------------------------------
+
+def sharding_bundle(model: Model, ocfg: OptimizerConfig, shape: ShapeSpec):
+    """All NamedShardings for one (arch x shape) cell."""
+    cfg, mesh = model.cfg, model.mesh
+    ns = lambda spec: NamedSharding(mesh, spec)
+    tree_ns = lambda tree: jax.tree.map(
+        ns, tree, is_leaf=lambda x: isinstance(x, P))
+
+    abstract_params = model.init_abstract()
+    pspec = partition.param_pspecs(cfg, abstract_params, mesh)
+    out: Dict[str, Any] = {
+        "abstract_params": abstract_params,
+        "params": tree_ns(pspec),
+        "param_pspecs": pspec,
+    }
+    ispecs = input_specs(cfg, shape)
+    out["inputs"] = ispecs
+    out["input_shardings"] = tree_ns(
+        partition.input_pspecs(cfg, ispecs, mesh))
+    if shape.kind == "train":
+        abstract_opt = jax.eval_shape(
+            functools.partial(opt_init, ocfg), abstract_params)
+        out["abstract_opt"] = abstract_opt
+        out["opt"] = tree_ns(opt_pspecs(ocfg, pspec, abstract_params))
+    if shape.kind in ("prefill", "decode"):
+        cspecs = model.cache_specs(shape.global_batch, shape.seq_len)
+        out["abstract_cache"] = cspecs
+        out["cache"] = tree_ns(partition.cache_pspecs(
+            cfg, cspecs, mesh, shape.global_batch))
+    return out

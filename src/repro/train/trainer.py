@@ -1,0 +1,166 @@
+"""Trainer: the fault-tolerant training loop.
+
+Production concerns implemented (and exercised by tests/examples):
+  * jit'd init with target shardings (params never materialize unsharded);
+  * microbatched train_step (see steps.py) with selectable gradient
+    exchange: 'auto' (GSPMD flat — the mpi4py analogue), 'tree' (paper-
+    faithful two-level binary trees), 'hier'/'hier_int8' (beyond-paper
+    reduce-scatter hierarchy with optional cross-pod compression);
+  * checkpoint/restart: async sharded checkpoints every N steps, auto
+    -resume from LATEST, crash-safe atomic commit;
+  * failure injection: ``failure_at`` raises mid-run (tests restart);
+  * straggler watchdog: EMA of step time, flags outliers, forces an
+    early checkpoint when sustained (the practical mitigation when you
+    cannot evict the slow host);
+  * elastic re-mesh: on (simulated) device loss, rebuild a smaller mesh
+    and restore the checkpoint under the new shardings (see elastic.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.checkpoint import checkpoint as ckpt_lib
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.data.pipeline import DataConfig, Prefetcher, SyntheticTokens
+from repro.models.model import Model
+from repro.optim.optimizer import OptimizerConfig, opt_init
+from repro.train import steps as steps_lib
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    checkpoint_every: int = 20
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    grad_comms: str = "auto"      # auto | tree | hier | hier_int8
+    log_every: int = 10
+    keep_last: int = 3
+    straggler_factor: float = 3.0
+    failure_at: Optional[int] = None     # simulate a crash at this step
+
+
+class StragglerWatchdog:
+    """Step-time EMA; flags sustained outliers and asks for an early
+    checkpoint (so a failing host loses minimal work)."""
+
+    def __init__(self, factor: float = 3.0, patience: int = 3):
+        self.factor = factor
+        self.patience = patience
+        self.ema: Optional[float] = None
+        self.strikes = 0
+        self.flagged = 0
+
+    def observe(self, dt: float) -> bool:
+        """Returns True when an early checkpoint is warranted."""
+        if self.ema is None:
+            self.ema = dt
+            return False
+        slow = dt > self.factor * self.ema
+        self.ema = 0.9 * self.ema + 0.1 * (self.ema if slow else dt)
+        self.strikes = self.strikes + 1 if slow else 0
+        if self.strikes >= self.patience:
+            self.flagged += 1
+            self.strikes = 0
+            return True
+        return False
+
+
+class Trainer:
+    def __init__(self, cfg: ArchConfig, shape: ShapeSpec, mesh: Mesh,
+                 tcfg: TrainerConfig, ocfg: Optional[OptimizerConfig] = None):
+        self.cfg, self.shape, self.mesh, self.tcfg = cfg, shape, mesh, tcfg
+        self.ocfg = ocfg or OptimizerConfig(
+            name=cfg.optimizer, total_steps=tcfg.total_steps)
+        self.model = Model(cfg, mesh)
+        self.bundle = steps_lib.sharding_bundle(self.model, self.ocfg, shape)
+        step_fn, self.n_microbatches = steps_lib.make_train_step(
+            self.model, self.ocfg, shape.global_batch,
+            grad_comms=tcfg.grad_comms)
+        self.train_step = jax.jit(
+            step_fn,
+            in_shardings=(self.bundle["params"], self.bundle["opt"],
+                          self.bundle["input_shardings"],
+                          NamedSharding(mesh, P())),
+            out_shardings=(self.bundle["params"], self.bundle["opt"], None),
+            donate_argnums=(0, 1))
+        self.checkpointer = ckpt_lib.AsyncCheckpointer(
+            tcfg.ckpt_dir, keep_last=tcfg.keep_last)
+        self.watchdog = StragglerWatchdog(tcfg.straggler_factor)
+        self.data = SyntheticTokens(
+            DataConfig(vocab_size=cfg.vocab_size, seq_len=shape.seq_len,
+                       global_batch=shape.global_batch), mesh)
+        self.history: list = []
+
+    # ------------------------------------------------------------- state
+    def init_state(self, seed: int = 0):
+        init = jax.jit(
+            lambda k: self.model.init(k),
+            out_shardings=self.bundle["params"])
+        params = init(jax.random.PRNGKey(seed))
+        oinit = jax.jit(lambda p: opt_init(self.ocfg, p),
+                        out_shardings=self.bundle["opt"])
+        opt_state = oinit(params)
+        return params, opt_state
+
+    def try_restore(self):
+        step = ckpt_lib.latest_step(self.tcfg.ckpt_dir)
+        if step is None:
+            return None
+        params = ckpt_lib.restore(
+            self.tcfg.ckpt_dir, step,
+            {"params": self.bundle["abstract_params"],
+             "opt": self.bundle["abstract_opt"]},
+            {"params": self.bundle["params"], "opt": self.bundle["opt"]})
+        return step + 1, params["params"], params["opt"]
+
+    # --------------------------------------------------------------- run
+    def run(self, resume: bool = True) -> Dict[str, Any]:
+        restored = self.try_restore() if resume else None
+        if restored is not None:
+            start, params, opt_state = restored
+            print(f"[trainer] restored checkpoint, resuming at step {start}")
+        else:
+            start = 0
+            params, opt_state = self.init_state()
+        prefetch = Prefetcher(self.data, start_step=start)
+        tc = self.tcfg
+        metrics = {}
+        try:
+            for step in range(start, tc.total_steps):
+                if tc.failure_at is not None and step == tc.failure_at:
+                    raise RuntimeError(f"injected failure at step {step}")
+                t0 = time.time()
+                got_step, batch = prefetch.next()
+                assert got_step == step, (got_step, step)
+                params, opt_state, metrics = self.train_step(
+                    params, opt_state, batch, jnp.asarray(step, jnp.int32))
+                jax.block_until_ready(metrics["loss"])
+                dt = time.time() - t0
+                want_early_ckpt = self.watchdog.observe(dt)
+                self.history.append(
+                    {"step": step, "loss": float(metrics["loss"]),
+                     "grad_norm": float(metrics["grad_norm"]), "dt": dt})
+                if step % tc.log_every == 0:
+                    print(f"[trainer] step {step} loss="
+                          f"{float(metrics['loss']):.4f} dt={dt*1e3:.0f}ms")
+                if want_early_ckpt or (
+                        step > 0 and step % tc.checkpoint_every == 0):
+                    self.checkpointer.save_async(
+                        step, {"params": params, "opt": opt_state})
+        finally:
+            prefetch.close()
+        self.checkpointer.wait()
+        ckpt_lib.save(self.tcfg.ckpt_dir, tc.total_steps - 1,
+                      {"params": params, "opt": opt_state},
+                      keep_last=tc.keep_last)
+        return {"params": params, "opt": opt_state,
+                "history": self.history,
+                "straggler_flags": self.watchdog.flagged,
+                "final_loss": float(metrics["loss"]) if metrics else None}

@@ -1,0 +1,46 @@
+"""Ring-cache invariants (hypothesis): after any chunked write pattern,
+the cache holds exactly the last `window` positions with correct values."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.models import cache as cl
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 4).map(lambda k: 2 ** k),       # W: 2..16
+       st.integers(0, 3), st.integers(1, 6))
+def test_ring_holds_last_window(w_exp, c_sel, n_chunks):
+    W = w_exp
+    C = [1, W, 2 * W, max(W // 2, 1)][c_sel]
+    if C < W and W % C:
+        C = 1
+    B, H, dh = 2, 1, 2
+    k = jnp.zeros((B, W, H, dh))
+    v = jnp.zeros((B, W, H, dh))
+    pos = jnp.full((B, W), -1, jnp.int32)
+    total = 0
+    for i in range(n_chunks):
+        q_pos = jnp.broadcast_to(
+            jnp.arange(total, total + C, dtype=jnp.int32)[None], (B, C))
+        new_k = jnp.broadcast_to(
+            q_pos[..., None, None].astype(jnp.float32), (B, C, H, dh))
+        k, v, pos = cl.update_kv(k, v, pos, new_k, new_k, q_pos)
+        total += C
+    have = sorted(int(x) for x in np.asarray(pos[0]) if x >= 0)
+    expect = list(range(max(0, total - W), total))
+    assert have == expect
+    # values match their positions
+    flat_pos = np.asarray(pos[0])
+    flat_val = np.asarray(k[0, :, 0, 0])
+    for p, val in zip(flat_pos, flat_val):
+        if p >= 0:
+            assert val == float(p)
+
+
+def test_cache_len_for():
+    from repro.configs.base import GLOBAL_WINDOW
+    assert cl.cache_len_for(GLOBAL_WINDOW, 100) == 100
+    assert cl.cache_len_for(16, 100) == 16
+    assert cl.cache_len_for(0, 100) == 100

@@ -1,0 +1,66 @@
+"""Checkpoint durability: roundtrip, atomic LATEST, gc, async writer."""
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import checkpoint as ck
+
+
+@pytest.fixture()
+def ckdir(tmp_path):
+    return str(tmp_path / "ckpt")
+
+
+def tree():
+    return {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "b": (jnp.ones((4,), jnp.bfloat16),
+                  {"c": jnp.asarray(3, jnp.int32)})}
+
+
+def test_roundtrip_with_bf16(ckdir):
+    t = tree()
+    ck.save(ckdir, 7, t)
+    assert ck.latest_step(ckdir) == 7
+    out = ck.restore(ckdir, 7, t)
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(t)):
+        assert a.dtype == b.dtype
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32))
+
+
+def test_latest_ignores_missing_dir(ckdir):
+    ck.save(ckdir, 1, tree())
+    ck.save(ckdir, 2, tree())
+    shutil.rmtree(os.path.join(ckdir, "step_00000002"))
+    # LATEST points at a deleted step -> falls back to newest valid
+    assert ck.latest_step(ckdir) == 1
+
+
+def test_gc_keeps_last(ckdir):
+    for s in range(5):
+        ck.save(ckdir, s, tree(), keep_last=2)
+    assert sorted(ck.all_steps(ckdir)) == [3, 4]
+
+
+def test_async_checkpointer_snapshots_before_donation(ckdir):
+    """The async writer must survive the caller deleting device buffers
+    right after save_async returns (donated-arg semantics)."""
+    acp = ck.AsyncCheckpointer(ckdir)
+    t = tree()
+    acp.save_async(3, t)
+    for leaf in jax.tree.leaves(t):
+        leaf.delete()
+    acp.wait()
+    assert acp.last_saved == 3
+    out = ck.restore(ckdir, 3, tree())
+    assert float(jnp.sum(out["a"])) == 15.0
+
+
+def test_restore_with_mismatched_count_raises(ckdir):
+    ck.save(ckdir, 0, tree())
+    with pytest.raises(AssertionError):
+        ck.restore(ckdir, 0, {"only": jnp.ones(3)})

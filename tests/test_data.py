@@ -1,0 +1,50 @@
+"""Data pipeline: determinism, restart reproducibility, prefetch order."""
+import numpy as np
+
+from repro.data.pipeline import DataConfig, Prefetcher, SyntheticTokens
+
+
+def cfg():
+    return DataConfig(vocab_size=1000, seq_len=32, global_batch=8, seed=3)
+
+
+def test_deterministic_across_instances():
+    a = SyntheticTokens(cfg()).batch_at(17)
+    b = SyntheticTokens(cfg()).batch_at(17)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    np.testing.assert_array_equal(a["labels"], b["labels"])
+
+
+def test_steps_differ_and_labels_shift():
+    src = SyntheticTokens(cfg())
+    b0, b1 = src.batch_at(0), src.batch_at(1)
+    assert not np.array_equal(b0["tokens"], b1["tokens"])
+    # label[t] is the next token of the same stream
+    assert b0["tokens"].shape == b0["labels"].shape == (8, 32)
+    np.testing.assert_array_equal(b0["tokens"][:, 1:], b0["labels"][:, :-1])
+
+
+def test_restart_resumes_at_step():
+    """Restarting the prefetcher at step k yields step k's batch — the
+    checkpoint/restart contract."""
+    src = SyntheticTokens(cfg())
+    pf = Prefetcher(src, start_step=5)
+    try:
+        step, batch = pf.next()
+        assert step == 5
+        np.testing.assert_array_equal(np.asarray(batch["tokens"]),
+                                      src.batch_at(5)["tokens"])
+        step2, _ = pf.next()
+        assert step2 == 6
+    finally:
+        pf.close()
+
+
+def test_learnable_structure_present():
+    """The repeated-ngram injection must create above-chance bigram
+    repetition (otherwise the e2e train demo cannot reduce loss)."""
+    b = SyntheticTokens(cfg()).batch_at(0)
+    t = b["tokens"]
+    n = DataConfig(vocab_size=1000, seq_len=32, global_batch=8).ngram
+    repeats = (t[:, n:2 * n] == t[:, 0:n]).mean()
+    assert repeats > 0.2

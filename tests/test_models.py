@@ -1,0 +1,91 @@
+"""Per-arch reduced smoke tests + prefill/decode consistency.
+
+Every assigned architecture instantiates a reduced same-family config and
+runs train loss + chunked prefill + one decode step on CPU, asserting
+shapes and finiteness.  The consistency test checks the serving
+invariant: [prefill(N); decode x k] logits == prefill(N+k) logits.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import get_config, list_configs, reduced
+from repro.launch.mesh import make_local_mesh
+from repro.models.model import Model
+
+ARCHS = list_configs()
+
+
+def _build(name):
+    cfg = reduced(get_config(name))
+    mesh = make_local_mesh(1, 1)
+    model = Model(cfg, mesh, q_chunk=8)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _batch(cfg, B, S, key):
+    batch = {
+        "tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size),
+        "labels": jax.random.randint(key, (B, S), 0, cfg.vocab_size),
+    }
+    if cfg.num_image_tokens:
+        batch["image_embeds"] = jnp.ones(
+            (B, cfg.num_image_tokens, cfg.d_model), jnp.bfloat16)
+    if cfg.encoder_layers:
+        batch["src_embeds"] = jnp.ones(
+            (B, cfg.src_seq_len, cfg.d_model), jnp.bfloat16)
+    return batch
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_arch_smoke(name):
+    cfg, model, params = _build(name)
+    B, S = 2, 16
+    batch = _batch(cfg, B, S, jax.random.PRNGKey(1))
+    loss, metrics = jax.jit(model.train_loss)(params, batch)
+    assert jnp.isfinite(loss), name
+    extras = {k: v for k, v in batch.items() if k.endswith("_embeds")}
+    logits, cache = jax.jit(model.prefill)(params, batch["tokens"], extras)
+    assert jnp.isfinite(logits).all()
+    lg2, cache2 = jax.jit(model.decode_step)(
+        params, batch["tokens"][:, :1], jnp.full((B,), S, jnp.int32), cache)
+    assert lg2.shape == (B, 1, cfg.vocab_size)
+    assert jnp.isfinite(lg2).all()
+    # cache structure preserved
+    assert jax.tree.structure(cache) == jax.tree.structure(cache2)
+
+
+@pytest.mark.parametrize("name", ["h2o-danube-1.8b", "gemma3-4b",
+                                  "xlstm-350m", "hymba-1.5b"])
+def test_prefill_decode_consistency(name):
+    """Decoding token-by-token after a prefill must reproduce the logits
+    of prefilling the longer prompt (exactness of ring caches + states)."""
+    cfg, model, params = _build(name)
+    B, S, K = 1, 16, 4
+    tokens = jax.random.randint(jax.random.PRNGKey(2), (B, S + K), 0,
+                                cfg.vocab_size)
+    # ground truth: prefill the full prompt
+    lg_full, _ = jax.jit(model.prefill)(params, tokens, {})
+    # prefill S (with decode headroom), then decode K tokens one at a time
+    lg, cache = jax.jit(lambda p, t: model.prefill(p, t, {}, max_len=S + K)
+                        )(params, tokens[:, :S])
+    for i in range(K):
+        lg, cache = jax.jit(model.decode_step)(
+            params, tokens[:, S + i:S + i + 1],
+            jnp.full((B,), S + i, jnp.int32), cache)
+    a = jnp.asarray(lg[:, -1], jnp.float32)
+    b = jnp.asarray(lg_full[:, -1], jnp.float32)
+    assert jnp.max(jnp.abs(a - b)) < 0.15, (name, float(jnp.max(jnp.abs(a - b))))
+
+
+def test_param_count_scale():
+    """Full-size param counts are in the advertised ballpark."""
+    # vision tower is stubbed per the assignment, backbone ~9.8B of 11B
+    assert 9e9 < get_config("llama-3.2-vision-11b").param_count() < 13e9
+    assert 0.9e12 < get_config("kimi-k2-1t-a32b").param_count() < 1.2e12
+    # uniform-SwiGLU FFN inflates vs upstream's 2-matrix GELU MLP
+    # (see configs/starcoder2_7b.py docstring)
+    assert 8e9 < get_config("starcoder2-7b").param_count() < 11e9
+    active = get_config("kimi-k2-1t-a32b").param_count(active_only=True)
+    assert 20e9 < active < 45e9

@@ -1,0 +1,128 @@
+"""End-to-end behaviour tests: training converges on structured data,
+fault tolerance (failure injection -> restart), elastic re-mesh, serving,
+and the HLO roofline parser — run on virtual-device subprocesses where a
+mesh is needed.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from tests._subproc import run_py
+
+
+def test_train_loss_decreases_and_restart_matches():
+    code = """
+import os, shutil, numpy as np, jax
+from repro.configs.base import get_config, reduced, ShapeSpec
+from repro.launch.mesh import make_local_mesh
+from repro.train.trainer import Trainer, TrainerConfig
+cfg = reduced(get_config("h2o-danube-1.8b"), microbatches=2)
+shape = ShapeSpec("tiny", "train", 64, 16)
+mesh = make_local_mesh(2, 4)
+d = "/tmp/repro_sys_ckpt"
+shutil.rmtree(d, ignore_errors=True)
+t = Trainer(cfg, shape, mesh, TrainerConfig(total_steps=14, checkpoint_every=5,
+            ckpt_dir=d, log_every=100, failure_at=11))
+try:
+    t.run(resume=False)
+    raise SystemExit("failure not injected")
+except RuntimeError:
+    pass
+t2 = Trainer(cfg, shape, mesh, TrainerConfig(total_steps=14, checkpoint_every=5,
+             ckpt_dir=d, log_every=100))
+out = t2.run(resume=True)
+steps = [h["step"] for h in out["history"]]
+assert steps[0] == 11 and steps[-1] == 13, steps
+losses = [h["loss"] for h in out["history"]]
+assert np.isfinite(losses).all()
+# synthetic data has learnable structure: loss should be below init ~ln(V)
+assert out["final_loss"] < 6.4, out["final_loss"]
+# elastic: restore under a smaller mesh with new shardings
+from repro.train import elastic, steps as steps_lib
+from repro.optim.optimizer import OptimizerConfig
+from repro.models.model import Model
+small = elastic.shrink_mesh(4, 4)
+m2 = Model(cfg, small)
+b2 = steps_lib.sharding_bundle(m2, OptimizerConfig(), shape)
+step, tree = elastic.remesh_restore(d,
+    {"params": b2["abstract_params"], "opt": b2["abstract_opt"]},
+    {"params": b2["params"], "opt": b2["opt"]})
+assert step == 13
+print("OK")
+"""
+    assert "OK" in run_py(code, ndev=8, timeout=560)
+
+
+def test_serving_engine_batched():
+    code = """
+import numpy as np, jax
+from repro.configs.base import get_config, reduced
+from repro.launch.mesh import make_local_mesh
+from repro.models.model import Model
+from repro.serve.engine import Engine, Request
+cfg = reduced(get_config("gemma3-4b"))
+mesh = make_local_mesh(1, 1)
+eng = Engine(cfg, mesh, slots=3, max_len=64)
+params = Model(cfg, mesh).init(jax.random.PRNGKey(0))
+eng.load(params)
+reqs = [Request(rid=i, prompt=(np.arange(4 + 3 * i) % cfg.vocab_size),
+                max_new_tokens=5) for i in range(5)]
+res = eng.run_to_completion(reqs)
+assert sorted(res) == [0, 1, 2, 3, 4]
+assert all(len(v) == 5 for v in res.values())
+# greedy decode must be independent of batch composition: single-request
+# engine reproduces the batched tokens
+eng2 = Engine(cfg, mesh, slots=1, max_len=64)
+eng2.load(params)
+solo = eng2.run_to_completion([Request(rid=0,
+        prompt=(np.arange(4) % cfg.vocab_size), max_new_tokens=5)])
+assert solo[0] == res[0], (solo[0], res[0])
+print("OK")
+"""
+    assert "OK" in run_py(code, ndev=1, timeout=560)
+
+
+def test_hlo_parser_trip_counts():
+    """The roofline analyzer must multiply loop bodies by trip counts."""
+    from repro.roofline import hlo as hlo_lib
+
+    def f(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), ()
+        out, _ = jax.lax.scan(body, x, None, length=7)
+        return out.sum()
+
+    xs = jnp.ones((64, 32), jnp.float32)
+    ws = jnp.ones((32, 32), jnp.float32)
+    c = jax.jit(f).lower(xs, ws).compile()
+    an = hlo_lib.analyze(c.as_text())
+    per_iter = 2 * 64 * 32 * 32
+    assert an["dot_flops"] == 7 * per_iter, an["dot_flops"]
+    assert any(t == 7 for _, t in an["loops"])
+    raw = c.cost_analysis().get("flops", 0)
+    assert raw < an["dot_flops"]          # raw undercounts loops
+
+
+def test_grad_comms_modes_equivalent():
+    code = """
+import shutil, numpy as np
+from repro.configs.base import get_config, reduced, ShapeSpec
+from repro.launch.mesh import make_local_mesh
+from repro.train.trainer import Trainer, TrainerConfig
+cfg = reduced(get_config("h2o-danube-1.8b"), microbatches=2)
+shape = ShapeSpec("tiny", "train", 32, 16)
+mesh = make_local_mesh(2, 2, pod=2)
+losses = {}
+for mode in ("auto", "tree", "hier", "hier_int8"):
+    shutil.rmtree("/tmp/repro_gc_ckpt", ignore_errors=True)
+    t = Trainer(cfg, shape, mesh, TrainerConfig(total_steps=3,
+        checkpoint_every=100, ckpt_dir="/tmp/repro_gc_ckpt",
+        grad_comms=mode, log_every=100))
+    losses[mode] = [h["loss"] for h in t.run(resume=False)["history"]]
+a = losses["auto"]
+for mode in ("tree", "hier"):
+    assert np.allclose(a, losses[mode], rtol=2e-2), (mode, a, losses[mode])
+assert np.allclose(a, losses["hier_int8"], rtol=8e-2)
+print("OK")
+"""
+    assert "OK" in run_py(code, ndev=8, timeout=560)

@@ -1,0 +1,48 @@
+"""Schedule properties for the paper's tree algorithms."""
+import math
+
+from hypothesis import given, strategies as st
+
+from repro.core import topology
+
+
+@given(st.integers(2, 64), st.integers(0, 63))
+def test_tree_bcast_covers_all(n, root):
+    root %= n
+    have = {root}
+    for rnd in topology.tree_bcast_rounds(n, root):
+        for src, dst in rnd:
+            assert src in have, "sender must already hold the data"
+            assert dst not in have, "receivers receive exactly once"
+            have.add(dst)
+    assert have == set(range(n))
+
+
+@given(st.integers(2, 64))
+def test_tree_bcast_round_count(n):
+    assert len(topology.tree_bcast_rounds(n)) == math.ceil(math.log2(n))
+
+
+@given(st.integers(2, 64), st.integers(0, 63))
+def test_serial_bcast(n, root):
+    root %= n
+    rounds = topology.serial_bcast_rounds(n, root)
+    assert len(rounds) == n - 1                      # the Fig 7 bottleneck
+    assert all(len(r) == 1 and r[0][0] == root for r in rounds)
+    assert {d for r in rounds for _, d in r} == set(range(n)) - {root}
+
+
+@given(st.integers(2, 64))
+def test_tree_gather_delivers_to_root(n):
+    """Every rank's block reaches rank 0 through a binary tree."""
+    holds = {i: {i} for i in range(n)}
+    for rnd in topology.tree_gather_rounds(n):
+        for src, dst in rnd:
+            holds[dst] |= holds[src]
+    assert holds[0] == set(range(n))
+
+
+def test_two_level_cost_monotone():
+    fast = topology.two_level_cost(256, 2, 8 << 20, 50e9, 6.25e9, tree=True)
+    slow = topology.two_level_cost(256, 2, 8 << 20, 50e9, 6.25e9, tree=False)
+    assert fast < slow
