@@ -1,10 +1,12 @@
 """Paper Fig 5 (aggregation) + Fig 7 (broadcast).
 
-Measured on virtual devices (2..8 ranks x {8 B, 8 KB, 8 MB} per-process):
-  * agg:   tree_agg (paper Fig 4 two-level binary gather)  vs  native
+Measured on virtual devices (2..8 ranks x {8 B, 8 KB, 8 MB} per-process)
+through the public Communicator surface — one transport per paper
+variant, selected from the registry:
+  * agg:   'tree' (paper Fig 4 two-level binary gather)  vs  'native'
            all-gather (the mpi4py analogue);
-  * bcast: serialized (paper 'initial'), binary-tree (paper 'optimized'),
-           native replication.
+  * bcast: 'serial' (paper 'initial'), 'tree' (paper 'optimized'),
+           'native' replication.
 
 Modeled to 256/512/768 ranks via the two-level cost model (rounds x
 bytes / per-level bandwidth) — the paper's sweep reaches 768 ranks and
@@ -18,11 +20,10 @@ if __name__ == "__main__" and "XLA_FLAGS" not in os.environ:
 
 import jax
 import jax.numpy as jnp
-from jax import lax, shard_map
 from jax.sharding import PartitionSpec as P
 
 from benchmarks.common import DCI_BW, ICI_BW, row, time_fn
-from repro.core import collectives as coll
+from repro.comms import Communicator
 from repro.core import topology
 
 SIZES = [8, 8 * 1024, 8 * 1024 * 1024]
@@ -30,26 +31,28 @@ SIZES = [8, 8 * 1024, 8 * 1024 * 1024]
 
 def bench_ranks(n: int) -> None:
     mesh = jax.make_mesh((n,), ("r",))
+    comms = {name: Communicator(mesh, name)
+             for name in ("native", "tree", "serial")}
+    spec = P("r")
 
-    def sm(body):
-        return jax.jit(shard_map(body, mesh=mesh, in_specs=(P("r"),),
-                                 out_specs=P("r"), check_vma=False))
+    def jit_op(comm, op):
+        def body(a):
+            out = getattr(comm, op)(a)
+            # reduce to a tiny per-rank value so timing isn't dominated
+            # by materializing the gathered buffer
+            return out.reshape(1, -1).mean(1, keepdims=True)
+        return jax.jit(comm.wrap(body, in_specs=(spec,), out_specs=spec))
 
     for size in SIZES:
         elems = max(size // 4, 1)
         x = jnp.ones((n, elems), jnp.float32)
-
-        agg_tree = sm(lambda a: coll.tree_gather_axis(a, "r")
-                      .reshape(1, -1).mean(1, keepdims=True))
-        agg_native = sm(lambda a: lax.all_gather(a, "r", axis=0, tiled=True)
-                        .reshape(1, -1).mean(1, keepdims=True))
-        bc_tree = sm(lambda a: coll.tree_bcast_axis(a, "r"))
-        bc_serial = sm(lambda a: coll.serial_bcast_axis(a, "r"))
-
-        row(f"agg_tree_r{n}_{size}B", time_fn(agg_tree, x))
-        row(f"agg_native_r{n}_{size}B", time_fn(agg_native, x))
-        row(f"bcast_tree_r{n}_{size}B", time_fn(bc_tree, x))
-        row(f"bcast_serial_r{n}_{size}B", time_fn(bc_serial, x))
+        row(f"agg_tree_r{n}_{size}B", time_fn(jit_op(comms["tree"],
+                                                     "agg"), x))
+        row(f"agg_native_r{n}_{size}B", time_fn(jit_op(comms["native"],
+                                                       "agg"), x))
+        for name in ("tree", "serial", "native"):
+            row(f"bcast_{name}_r{n}_{size}B",
+                time_fn(jit_op(comms[name], "bcast"), x))
 
 
 def modeled() -> None:

@@ -1,6 +1,8 @@
 """Trainer-level extension of the paper's study: gradient all-reduce via
 flat native (mpi4py analogue) vs paper tree (agg+bcast) vs hierarchical
-reduce-scatter (beyond-paper), plus int8-compressed cross-pod.
+reduce-scatter (beyond-paper), plus int8-compressed cross-pod — all
+driven through the public Communicator API exactly as train/steps.py
+wires it (a CommSpec per mode, batch-axis topology).
 
 Reports measured time on an 8-device (2 pod x 2 data x 2 model) virtual
 mesh AND the HLO link bytes of each variant (from the roofline parser) —
@@ -13,11 +15,10 @@ if __name__ == "__main__" and "XLA_FLAGS" not in os.environ:
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import PartitionSpec as P
 
 from benchmarks.common import row, time_fn
-from repro.comms import backend as backend_lib
+from repro.comms import CommSpec, Communicator
 from repro.roofline import hlo as hlo_lib
 
 
@@ -25,17 +26,13 @@ def main() -> None:
     mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
     nbytes = 4 * 1024 * 1024
     x = jnp.ones((8, nbytes // 4 // 8), jnp.float32)
+    spec = P(("pod", "data", "model"))
 
     for name in ("native", "tree", "hier", "hier_int8"):
-        be = backend_lib.for_name(name, "pod", ("data",))
-
-        def body(a):
-            return be.allreduce(a)
-
-        f = jax.jit(shard_map(body, mesh=mesh,
-                              in_specs=(P(("pod", "data", "model")),),
-                              out_specs=P(("pod", "data", "model")),
-                              check_vma=False))
+        comm = Communicator(mesh, CommSpec.from_flag(name),
+                            axes=("pod", "data"))
+        f = jax.jit(comm.wrap(comm.allreduce, in_specs=(spec,),
+                              out_specs=spec))
         us = time_fn(f, x)
         an = hlo_lib.analyze(f.lower(x).compile().as_text(), pod_size=4,
                              n_pods=2)

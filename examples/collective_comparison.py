@@ -13,10 +13,10 @@ import time
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import PartitionSpec as P
 
-from repro.core import collectives as coll, topology
+from repro.comms import Communicator
+from repro.core import topology
 from repro.launch.mesh import make_local_mesh
 
 
@@ -30,18 +30,20 @@ def timeit(fn, x, iters=5):
 
 def main() -> None:
     mesh = make_local_mesh(2, 2, pod=2)   # two "pods" of 2x2
-    axes = tuple(mesh.axis_names)
-    sm = lambda f: jax.jit(shard_map(f, mesh=mesh, in_specs=(P(axes),),
-                                     out_specs=P(axes), check_vma=False))
+    spec = P(tuple(mesh.axis_names))
+    serial_comm = Communicator(mesh, "serial")
+    tree_comm = Communicator(mesh, "tree")
+
+    def jit_bcast(comm):
+        return jax.jit(comm.wrap(comm.bcast, in_specs=(spec,),
+                                 out_specs=spec))
+
     print(f"{'bytes/rank':>12} {'serial us':>10} {'tree us':>10} "
           f"{'speedup':>8}")
     for size in (8, 8 * 1024, 8 * 1024 * 1024):
         x = jnp.ones((8, max(size // 4, 1)), jnp.float32)
-        serial = sm(lambda a: coll.two_level_bcast(
-            a, pod_axis="pod", in_axes=("data", "model"), tree=False))
-        tree = sm(lambda a: coll.two_level_bcast(
-            a, pod_axis="pod", in_axes=("data", "model"), tree=True))
-        ts, tt = timeit(serial, x), timeit(tree, x)
+        ts = timeit(jit_bcast(serial_comm), x)
+        tt = timeit(jit_bcast(tree_comm), x)
         print(f"{size:>12} {ts:>10.0f} {tt:>10.0f} {ts/tt:>7.1f}x")
 
     print("\nmodeled at pod scale (v5e, 256 ranks/pod):")

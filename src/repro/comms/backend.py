@@ -1,155 +1,38 @@
-"""Layered messaging: the pPython architecture point that "any other
-communication library could be substituted for PythonMPI".
+"""DEPRECATED shim — the string-factory Backend API, kept one release.
 
-``Backend`` is the interface the PGAS layer and the trainer's gradient
-exchange program against.  Two implementations:
-
-* ``NativeCollectives`` — XLA's own collectives (psum / all_gather /
-  psum_scatter).  This is the platform-native transport: the analogue of
-  the paper's mpi4py-over-OpenMPI-RoCE baseline.
-* ``TreeMessaging``    — explicit point-to-point `ppermute` rounds
-  organized by the paper's node-aware binary-tree schedules (PythonMPI
-  analogue: the transport *we* schedule, not the vendor library).
-
-Both are pure functions usable inside `shard_map`; `for_name` picks one
-from a CLI flag.
+The comms layer is now the mesh-bound :class:`repro.comms.Communicator`
+(see communicator.py / README.md); algorithms live in the transport
+registry (transports.py).  ``for_name`` and the ``Backend`` alias below
+delegate there and will be removed in the next release.
 """
 from __future__ import annotations
 
-import abc
+import warnings
 from typing import Optional, Sequence
 
-import jax
-from jax import lax
+from repro.comms.topology import Topology
+from repro.comms.transports import (Transport, available_transports,
+                                    get_transport)
 
-from repro.core import collectives as coll
-
-Array = jax.Array
-
-
-class Backend(abc.ABC):
-    """Collective interface over (pod_axis, in_axes) hierarchy levels."""
-
-    def __init__(self, pod_axis: Optional[str], in_axes: Sequence[str]):
-        self.pod_axis = pod_axis
-        self.in_axes = tuple(in_axes)
-
-    @abc.abstractmethod
-    def allreduce(self, x: Array) -> Array:
-        ...
-
-    @abc.abstractmethod
-    def bcast(self, x: Array, root: int = 0) -> Array:
-        ...
-
-    @abc.abstractmethod
-    def agg(self, x: Array, root: int = 0) -> Array:
-        """Concat-gather the per-rank block onto the leader."""
-        ...
-
-    @property
-    def axes(self):
-        return ((self.pod_axis,) if self.pod_axis else ()) + self.in_axes
+Backend = Transport     # old name for isinstance checks in downstream code
 
 
-class NativeCollectives(Backend):
-    """XLA-native (the 'mpi4py/RoCE' baseline)."""
-
-    def allreduce(self, x):
-        return lax.psum(x, self.axes)
-
-    def bcast(self, x, root: int = 0):
-        # native broadcast = all-gather + select root's block; XLA has no
-        # bcast primitive, this is what GSPMD emits for replication
-        flat = x.reshape(-1)
-        full = flat
-        for a in reversed(self.in_axes):
-            full = lax.all_gather(full, a, axis=0, tiled=True)
-        if self.pod_axis:
-            full = lax.all_gather(full, self.pod_axis, axis=0, tiled=True)
-        return full[: flat.shape[0] * 0 + flat.shape[0]].reshape(x.shape) \
-            if root == 0 else full.reshape((-1,) + x.shape)[root]
-
-    def agg(self, x, root: int = 0):
-        flat = x.reshape(-1)
-        full = flat
-        for a in reversed(self.in_axes):
-            full = lax.all_gather(full, a, axis=0, tiled=True)
-        if self.pod_axis:
-            full = lax.all_gather(full, self.pod_axis, axis=0, tiled=True)
-        me = _linear_rank(self.pod_axis, self.in_axes)
-        import jax.numpy as jnp
-        return jnp.where(me == root, full, jnp.zeros_like(full))
-
-
-class TreeMessaging(Backend):
-    """Paper-faithful node-aware binary-tree transport (PythonMPI analogue)."""
-
-    def allreduce(self, x):
-        return coll.tree_allreduce_local(x, pod_axis=self.pod_axis,
-                                         in_axes=self.in_axes)
-
-    def bcast(self, x, root: int = 0):
-        return coll.two_level_bcast(x, pod_axis=self.pod_axis,
-                                    in_axes=self.in_axes, tree=True,
-                                    root=root)
-
-    def agg(self, x, root: int = 0):
-        return coll.two_level_agg(x, pod_axis=self.pod_axis,
-                                  in_axes=self.in_axes, root=root)
-
-
-class SerialMessaging(TreeMessaging):
-    """The paper's *initial* (pre-optimization) serialized broadcast —
-    kept for the Fig 7 comparison."""
-
-    def bcast(self, x, root: int = 0):
-        return coll.two_level_bcast(x, pod_axis=self.pod_axis,
-                                    in_axes=self.in_axes, tree=False,
-                                    root=root)
-
-
-class HierCollectives(Backend):
-    """Beyond-paper: reduce-scatter-based hierarchical exchange with
-    optional int8 cross-pod compression."""
-
-    def __init__(self, pod_axis, in_axes, compress: Optional[str] = None):
-        super().__init__(pod_axis, in_axes)
-        self.compress = compress
-
-    def allreduce(self, x):
-        return coll.hier_allreduce_local(x, pod_axis=self.pod_axis,
-                                         in_axes=self.in_axes,
-                                         compress=self.compress)
-
-    def bcast(self, x, root: int = 0):
-        return coll.two_level_bcast(x, pod_axis=self.pod_axis,
-                                    in_axes=self.in_axes, tree=True,
-                                    root=root)
-
-    def agg(self, x, root: int = 0):
-        return coll.two_level_agg(x, pod_axis=self.pod_axis,
-                                  in_axes=self.in_axes, root=root)
-
-
-def _linear_rank(pod_axis, in_axes):
-    import jax.numpy as jnp
-    me = jnp.zeros((), jnp.int32)
-    for a in ((pod_axis,) if pod_axis else ()) + tuple(in_axes):
-        me = me * lax.axis_size(a) + lax.axis_index(a)
-    return me
+def _topology(pod_axis: Optional[str], in_axes: Sequence[str]) -> Topology:
+    # legacy callers pass no mesh; sizes are only needed by ops that the
+    # legacy surface (allreduce/bcast/agg) resolves inside shard_map, so
+    # a sizeless placeholder is sound for them — but not for the new ops.
+    axes = ((pod_axis,) if pod_axis else ()) + tuple(in_axes)
+    return Topology(pod_axis=pod_axis, in_axes=tuple(in_axes),
+                    axis_sizes=(0,) * len(axes))
 
 
 def for_name(name: str, pod_axis: Optional[str], in_axes: Sequence[str]
-             ) -> Backend:
-    if name == "native":
-        return NativeCollectives(pod_axis, in_axes)
-    if name == "tree":
-        return TreeMessaging(pod_axis, in_axes)
-    if name == "serial":
-        return SerialMessaging(pod_axis, in_axes)
-    if name == "hier":
-        return HierCollectives(pod_axis, in_axes)
-    if name == "hier_int8":
-        return HierCollectives(pod_axis, in_axes, compress="int8")
-    raise ValueError(f"unknown comms backend {name!r}")
+             ) -> Transport:
+    """DEPRECATED: use ``Communicator(mesh, spec)`` instead."""
+    warnings.warn(
+        "repro.comms.backend.for_name is deprecated; construct a "
+        "repro.comms.Communicator(mesh, spec=name) instead",
+        DeprecationWarning, stacklevel=2)
+    if name not in available_transports():
+        raise ValueError(f"unknown comms backend {name!r}")
+    return get_transport(name, _topology(pod_axis, in_axes))

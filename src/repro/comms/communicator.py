@@ -1,0 +1,238 @@
+"""The mesh-bound Communicator: the full PythonMPI surface in one object.
+
+The paper's PGAS layer programs against a tiny messaging API (SendMsg /
+RecvMsg / agg / bcast / barrier) precisely so "any other communication
+library could be substituted".  ``Communicator`` is that API here:
+constructed once from a mesh (hierarchy derived in one place by
+``Topology.from_mesh``), it exposes
+
+  in-shard_map ops   send / recv / sendrecv / barrier / bcast / agg /
+                     allreduce / reduce_scatter / allgather
+  jit-level entry    comm.run(fn, *args) / comm.wrap(fn)  — so callers
+                     never hand-roll their own ``shard_map``
+
+with per-op algorithm selection via ``CommSpec`` and the transport
+registry (native / tree / serial / hier / hier_int8).  All data ops are
+pytree-aware.  See repro/comms/README.md for the paper-function mapping.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.comms import compat
+from repro.comms.topology import Topology
+from repro.comms.transports import Transport, get_transport
+
+Array = jax.Array
+
+_OPS = ("allreduce", "bcast", "agg", "reduce_scatter", "allgather")
+
+
+@dataclasses.dataclass(frozen=True)
+class CommSpec:
+    """Per-op transport selection (names from the transport registry)."""
+
+    allreduce: str = "native"
+    bcast: str = "native"
+    agg: str = "native"
+    reduce_scatter: str = "native"
+    allgather: str = "native"
+
+    @classmethod
+    def from_flag(cls, flag: str) -> "CommSpec":
+        """Map a CLI-style algorithm flag (--grad-comms) to a spec.
+        'auto' (GSPMD, no explicit comms) must be handled by the caller
+        *before* building a Communicator."""
+        if flag == "auto":
+            raise ValueError("grad_comms='auto' means GSPMD handles the "
+                             "exchange; no Communicator is involved")
+        return cls(**{op: flag for op in _OPS})
+
+
+def _as_spec(spec: Union[str, CommSpec, None]) -> CommSpec:
+    if spec is None:
+        return CommSpec()
+    if isinstance(spec, str):
+        return CommSpec(**{op: spec for op in _OPS})
+    return spec
+
+
+class Communicator:
+    """Mesh-bound SPMD messaging object (see module docstring).
+
+    Data-op methods run *inside* shard_map over ``self.axes`` — either a
+    shard_map the caller already has, or one built by ``self.run`` /
+    ``self.wrap``.  Ranks are linear C-order over ``self.axes`` (pod
+    level first), matching the paper's leader-on-rank-0 convention.
+    """
+
+    def __init__(self, mesh: Mesh,
+                 spec: Union[str, CommSpec, None] = None,
+                 axes: Optional[Sequence[str]] = None):
+        self.mesh = mesh
+        self.spec = _as_spec(spec)
+        self.topo = Topology.from_mesh(mesh, axes=axes)
+        self._t: Dict[str, Transport] = {
+            op: get_transport(getattr(self.spec, op), self.topo)
+            for op in _OPS}
+        self._sync_fn = None
+
+    # -------------------------------------------------------------- identity
+    @property
+    def axes(self):
+        return self.topo.axes
+
+    @property
+    def size(self) -> int:
+        return self.topo.n_ranks
+
+    def rank(self):
+        """Linear rank of the calling shard (traced; in-shard_map)."""
+        return self.topo.rank()
+
+    # -------------------------------------------------- point-to-point (p2p)
+    def sendrecv(self, x: Any, pairs: Sequence[tuple]) -> Any:
+        """Scheduled p2p rounds (the primitive under SendMsg/RecvMsg):
+        each (src, dst) pair moves src's leaf values to dst; every other
+        rank keeps its own.  Pairs are static linear ranks."""
+        pairs = [(self._check_rank(int(s), "src"),
+                  self._check_rank(int(d), "dst")) for s, d in pairs]
+        dsts = jnp.asarray([d for _, d in pairs], jnp.int32)
+        me = self.topo.rank()
+        is_dst = jnp.any(me == dsts)
+
+        def leaf(v):
+            recv = compat.ppermute(v, self.axes, pairs)
+            return jnp.where(is_dst, recv, v)
+        return jax.tree.map(leaf, x)
+
+    def send(self, x: Any, dst: int, *, src: int = 0) -> Any:
+        """pPython SendMsg: deliver rank ``src``'s value of ``x`` to rank
+        ``dst`` (SPMD: both endpoints — and everyone else — execute the
+        same call; non-participants pass ``x`` through)."""
+        return self.sendrecv(x, [(src, dst)])
+
+    def recv(self, x: Any, src: int, *, dst: int) -> Any:
+        """pPython RecvMsg: the receiving spelling of ``send`` — rank
+        ``dst`` ends up holding rank ``src``'s value."""
+        return self.sendrecv(x, [(src, dst)])
+
+    # ------------------------------------------------------------ collectives
+    def barrier(self) -> Array:
+        """In-shard_map rank barrier: a zero-byte-ish reduction every rank
+        must reach.  Returns a 0-d token to thread into downstream ops."""
+        return compat.psum(jnp.zeros((), jnp.float32), self.axes)
+
+    def allreduce(self, x: Any) -> Any:
+        return jax.tree.map(self._t["allreduce"].allreduce, x)
+
+    def _check_rank(self, rank: int, what: str) -> int:
+        if not 0 <= rank < self.size:
+            raise ValueError(f"{what}={rank} out of range for "
+                             f"{self.size} ranks over axes {self.axes}")
+        return rank
+
+    def bcast(self, x: Any, root: int = 0) -> Any:
+        self._check_rank(root, "root")
+        return jax.tree.map(lambda v: self._t["bcast"].bcast(v, root), x)
+
+    def agg(self, x: Any, root: int = 0) -> Any:
+        """Concat-gather every rank's leaf onto ``root`` (flat, (n*size,)
+        per leaf); zeros elsewhere — pPython's agg()."""
+        self._check_rank(root, "root")
+        return jax.tree.map(lambda v: self._t["agg"].agg(v, root), x)
+
+    def reduce_scatter(self, x: Any) -> Any:
+        return jax.tree.map(self._t["reduce_scatter"].reduce_scatter, x)
+
+    def allgather(self, x: Any) -> Any:
+        """agg visible on every rank (pPython's agg() + bcast)."""
+        return jax.tree.map(self._t["allgather"].allgather, x)
+
+    # ------------------------------------------------------- jit-level entry
+    def wrap(self, fn: Callable, *, in_specs=None, out_specs=None,
+             manual_axes: Optional[Sequence[str]] = None) -> Callable:
+        """shard_map ``fn`` over this communicator's mesh — THE way to
+        enter comm ops from jit level; callers never build shard_maps.
+
+        Defaults: replicated in/out (``P()``).  ``manual_axes`` limits
+        manual mapping to a subset (e.g. batch axes), leaving the rest to
+        GSPMD — such partial maps must run under ``jax.jit``.  On jax
+        versions whose partial-manual regions cannot lower scheduled
+        primitives (see compat), a rank token is threaded in and the
+        comm ops transparently run their masked-psum emulation.
+        """
+        if in_specs is None:
+            in_specs = P()
+        if out_specs is None:
+            out_specs = P()
+        partial = (manual_axes is not None
+                   and frozenset(manual_axes) != frozenset(
+                       self.mesh.axis_names))
+        if not (partial and compat.PARTIAL_MANUAL_NEEDS_EMULATION):
+            return compat.shard_map(fn, mesh=self.mesh, in_specs=in_specs,
+                                    out_specs=out_specs,
+                                    manual_axes=manual_axes)
+
+        if not isinstance(in_specs, (tuple, list)):
+            raise TypeError(
+                "partial-manual wrap on this jax version threads a rank "
+                "token and needs in_specs as an explicit tuple (one spec "
+                "per argument)")
+        topo = self.topo
+
+        def outer(rank_arr, *args):
+            token = compat.enter_partial_manual(
+                rank_arr[0], topo.axes, topo.axis_sizes)
+            try:
+                return fn(*args)
+            finally:
+                compat.exit_partial_manual(token)
+
+        mapped = compat.shard_map(
+            outer, mesh=self.mesh,
+            in_specs=(P(topo.axes),) + tuple(in_specs),
+            out_specs=out_specs, manual_axes=manual_axes)
+
+        def call(*args):
+            ranks = jnp.arange(topo.n_ranks, dtype=jnp.int32)
+            return mapped(ranks, *args)
+        return call
+
+    def run(self, fn: Callable, *args, in_specs=None, out_specs=None,
+            manual_axes: Optional[Sequence[str]] = None):
+        """Run ``fn`` (a body using this communicator's ops) under
+        shard_map on ``args``."""
+        if in_specs is None and args:
+            in_specs = tuple(P() for _ in args)
+        return self.wrap(fn, in_specs=in_specs, out_specs=out_specs,
+                         manual_axes=manual_axes)(*args)
+
+    def sync(self) -> None:
+        """Host-blocking device barrier (jit-level ``barrier``): returns
+        once every rank of the mesh has reached it."""
+        if self._sync_fn is None:
+            self._sync_fn = jax.jit(
+                self.wrap(lambda t: t + self.barrier(),
+                          in_specs=(P(),), out_specs=P()))
+        jax.block_until_ready(self._sync_fn(jnp.zeros((), jnp.float32)))
+
+    # ------------------------------------------------------------- caching
+    _CACHE: Dict[Any, "Communicator"] = {}
+
+    @classmethod
+    def for_mesh(cls, mesh: Mesh,
+                 spec: Union[str, CommSpec, None] = None,
+                 axes: Optional[Sequence[str]] = None) -> "Communicator":
+        """Memoized constructor — hot paths (Dmat ops) share one
+        Communicator (and its jitted sync) per (mesh, spec, axes)."""
+        key = (mesh, _as_spec(spec), None if axes is None else tuple(axes))
+        comm = cls._CACHE.get(key)
+        if comm is None:
+            comm = cls._CACHE[key] = cls(mesh, spec, axes)
+        return comm

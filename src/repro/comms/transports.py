@@ -1,0 +1,204 @@
+"""Transport registry: the per-op algorithms behind the Communicator.
+
+A ``Transport`` implements the collective surface for one topology using
+one algorithm family; all methods are per-leaf and run *inside*
+shard_map (the Communicator owns pytree mapping and the jit-level
+``run`` entry point).  Implementations:
+
+* ``native``    — XLA's own collectives (psum / all_gather /
+  psum_scatter): the platform transport, the analogue of the paper's
+  mpi4py-over-OpenMPI-RoCE baseline.
+* ``tree``      — the paper's node-aware binary-tree schedules over
+  explicit ``ppermute`` rounds (PythonMPI analogue: the transport *we*
+  schedule).
+* ``serial``    — the paper's *initial* serialized broadcast (the Fig 7
+  baseline), kept for comparison.
+* ``hier``      — beyond-paper reduce-scatter hierarchy.
+* ``hier_int8`` — ``hier`` with int8 cross-pod compression.
+
+New transports register with ``@register_transport("name")`` — the
+swappable-messaging-library architecture point of the paper, made a
+one-decorator extension.
+"""
+from __future__ import annotations
+
+import abc
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.comms import compat
+from repro.comms.topology import Topology
+from repro.core import collectives as coll
+
+Array = jax.Array
+
+_REGISTRY: Dict[str, Callable[[Topology], "Transport"]] = {}
+
+
+def register_transport(name: str):
+    """Class decorator: make a Transport constructible by name."""
+    def deco(cls):
+        _REGISTRY[name] = cls
+        cls.name = name
+        return cls
+    return deco
+
+
+def get_transport(name: str, topo: Topology) -> "Transport":
+    try:
+        factory = _REGISTRY[name]
+    except KeyError:
+        raise ValueError(f"unknown comms transport {name!r}; "
+                         f"available: {sorted(_REGISTRY)}") from None
+    return factory(topo)
+
+
+def available_transports() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+class Transport(abc.ABC):
+    """Per-leaf collective ops over a Topology's (pod, in_axes) levels.
+
+    Semantics (all SPMD; ``n`` = topo.n_ranks, ranks linear C-order over
+    ``topo.axes``):
+      * allreduce(x)        -> elementwise global sum, every rank.
+      * bcast(x, root)      -> root's value, every rank.
+      * agg(x, root)        -> flat concat of every rank's ``x`` (shape
+                               (n * x.size,)) on ``root``; zeros elsewhere
+                               (the SPMD-observable form of pPython's
+                               "returns on the leader").
+      * allgather(x)        -> the same flat concat, on every rank.
+      * reduce_scatter(x)   -> global sum, each rank keeping its own
+                               1/n block of the (zero-padded) flat value;
+                               shape (ceil(x.size / n),).
+    """
+
+    name: str = "?"
+
+    def __init__(self, topo: Topology):
+        self.topo = topo
+
+    @abc.abstractmethod
+    def allreduce(self, x: Array) -> Array:
+        ...
+
+    @abc.abstractmethod
+    def bcast(self, x: Array, root: int = 0) -> Array:
+        ...
+
+    @abc.abstractmethod
+    def agg(self, x: Array, root: int = 0) -> Array:
+        ...
+
+    def allgather(self, x: Array) -> Array:
+        # default: aggregate onto rank 0, then broadcast the full buffer
+        return self.bcast(self.agg(x, root=0), root=0)
+
+    def reduce_scatter(self, x: Array) -> Array:
+        n = self.topo.size()
+        flat = self.allreduce(x).reshape(-1)
+        blk = -(-flat.shape[0] // n)
+        if flat.shape[0] != n * blk:
+            flat = jnp.pad(flat, (0, n * blk - flat.shape[0]))
+        return lax.dynamic_slice(flat, (self.topo.rank() * blk,), (blk,))
+
+    # ------------------------------------------------------------- helpers
+    def _gather_all_axes(self, flat: Array) -> Array:
+        """Concat-gather over every level, innermost axis first, so block
+        order matches the C-order linear rank layout."""
+        full = flat
+        for a in reversed(self.topo.in_axes):
+            full = compat.all_gather_tiled(full, a)
+        if self.topo.pod_axis:
+            full = compat.all_gather_tiled(full, self.topo.pod_axis)
+        return full
+
+
+@register_transport("native")
+class NativeTransport(Transport):
+    """XLA-native (the 'mpi4py/RoCE' baseline)."""
+
+    def allreduce(self, x):
+        return compat.psum(x, self.topo.axes)
+
+    def bcast(self, x, root: int = 0):
+        # XLA has no bcast primitive: all-gather, then select the root's
+        # block (works for any root — GSPMD emits this for replication)
+        flat = x.reshape(-1)
+        full = self._gather_all_axes(flat)
+        return full.reshape((self.topo.size(),) + x.shape)[root]
+
+    def agg(self, x, root: int = 0):
+        full = self._gather_all_axes(x.reshape(-1))
+        me = self.topo.rank()
+        return jnp.where(me == root, full, jnp.zeros_like(full))
+
+    def allgather(self, x):
+        return self._gather_all_axes(x.reshape(-1))
+
+    def reduce_scatter(self, x):
+        n = self.topo.size()
+        flat = x.reshape(-1)
+        blk = -(-flat.shape[0] // n)
+        if flat.shape[0] != n * blk:
+            flat = jnp.pad(flat, (0, n * blk - flat.shape[0]))
+        return compat.psum_scatter_blocks(flat.reshape(n, blk),
+                                          self.topo.axes)
+
+
+@register_transport("tree")
+class TreeTransport(Transport):
+    """Paper-faithful node-aware binary trees (PythonMPI analogue)."""
+
+    def allreduce(self, x):
+        return coll.tree_allreduce_local(x, pod_axis=self.topo.pod_axis,
+                                         in_axes=self.topo.in_axes)
+
+    def bcast(self, x, root: int = 0):
+        return coll.two_level_bcast(x, pod_axis=self.topo.pod_axis,
+                                    in_axes=self.topo.in_axes, tree=True,
+                                    root=root)
+
+    def agg(self, x, root: int = 0):
+        return coll.two_level_agg(x.reshape(-1),
+                                  pod_axis=self.topo.pod_axis,
+                                  in_axes=self.topo.in_axes, root=root)
+
+
+@register_transport("serial")
+class SerialTransport(TreeTransport):
+    """The paper's *initial* serialized broadcast — kept for the Fig 7
+    comparison.  The broadcast half of allreduce serializes too, so this
+    transport is a genuine P-1-round baseline, not an alias of 'tree'."""
+
+    def allreduce(self, x):
+        return coll.tree_allreduce_local(x, pod_axis=self.topo.pod_axis,
+                                         in_axes=self.topo.in_axes,
+                                         tree_bcast=False)
+
+    def bcast(self, x, root: int = 0):
+        return coll.two_level_bcast(x, pod_axis=self.topo.pod_axis,
+                                    in_axes=self.topo.in_axes, tree=False,
+                                    root=root)
+
+
+@register_transport("hier")
+class HierTransport(TreeTransport):
+    """Beyond-paper: in-pod reduce-scatter -> cross-pod all-reduce ->
+    in-pod all-gather, optionally int8-compressed across pods."""
+
+    compress: Optional[str] = None
+
+    def allreduce(self, x):
+        return coll.hier_allreduce_local(x, pod_axis=self.topo.pod_axis,
+                                         in_axes=self.topo.in_axes,
+                                         compress=self.compress)
+
+
+@register_transport("hier_int8")
+class HierInt8Transport(HierTransport):
+    compress = "int8"

@@ -1,8 +1,8 @@
 """PGAS core: the paper's contribution (maps, distributed arrays,
 node-aware tree collectives) as composable JAX modules."""
+from repro.core import collectives, topology
 from repro.core.dmap import Dmap
 from repro.core.dmat import Dmat, ones, rand, zeros
-from repro.core import collectives, topology
 
 __all__ = ["Dmap", "Dmat", "zeros", "ones", "rand", "collectives",
            "topology"]

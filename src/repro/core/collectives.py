@@ -16,32 +16,28 @@ Three families, all expressed as `shard_map` bodies over mesh axes:
 The native XLA collectives (plain psum/all_gather) play the role of the
 paper's mpi4py/OpenMPI-RoCE baseline.
 
-All functions take ``x`` with the *per-rank value in the shard* along
-``axis`` and are numerically equivalent to their flat counterparts —
-property-tested in tests/test_collectives.py on virtual devices.
+All functions run *inside* shard_map (the jit-level entry point is
+``repro.comms.Communicator.run``) and are numerically equivalent to
+their flat counterparts — property-tested in
+tests/test_collectives_multidev.py on virtual devices.
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional, Sequence, Tuple
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 from jax import lax
-from jax.sharding import Mesh, PartitionSpec as P
-from jax import shard_map
 
+from repro.comms.compat import (all_gather_tiled as _all_gather,
+                                axis_index as _axis_index,
+                                axis_size as _axis_size,
+                                ppermute as _ppermute,
+                                psum as _psum,
+                                psum_scatter_blocks as _psum_scatter)
 from repro.core import topology
 
 Array = jax.Array
-
-
-# ---------------------------------------------------------------------------
-# single-axis primitives (run *inside* shard_map)
-# ---------------------------------------------------------------------------
-
-def _axis_size(axis: str) -> int:
-    return lax.axis_size(axis)
 
 
 def tree_bcast_axis(x: Array, axis: str, root: int = 0) -> Array:
@@ -49,11 +45,11 @@ def tree_bcast_axis(x: Array, axis: str, root: int = 0) -> Array:
 
     The value on rank ``root`` wins; other ranks' payloads are ignored.
     log2(n) ppermute rounds — the paper's optimized broadcast."""
-    n = lax.axis_size(axis)
-    me = lax.axis_index(axis)
+    n = _axis_size(axis)
+    me = _axis_index(axis)
     have = (me == root)
     for rnd in topology.tree_bcast_rounds(n, root):
-        recv = lax.ppermute(x, axis, rnd)
+        recv = _ppermute(x, axis, rnd)
         dsts = jnp.array([d for _, d in rnd], jnp.int32)
         is_dst = jnp.any(me == dsts)
         take = is_dst & ~have
@@ -65,10 +61,10 @@ def tree_bcast_axis(x: Array, axis: str, root: int = 0) -> Array:
 def serial_bcast_axis(x: Array, axis: str, root: int = 0) -> Array:
     """The paper's initial serialized broadcast: n-1 rounds, root sends to
     one rank per round."""
-    n = lax.axis_size(axis)
-    me = lax.axis_index(axis)
+    n = _axis_size(axis)
+    me = _axis_index(axis)
     for rnd in topology.serial_bcast_rounds(n, root):
-        recv = lax.ppermute(x, axis, rnd)
+        recv = _ppermute(x, axis, rnd)
         (src, dst), = rnd
         x = jnp.where(me == dst, recv, x)
     return x
@@ -77,10 +73,10 @@ def serial_bcast_axis(x: Array, axis: str, root: int = 0) -> Array:
 def tree_reduce_axis(x: Array, axis: str, root: int = 0) -> Array:
     """Binary-tree sum-reduction to ``root`` along one axis (the reduce
     flavour of the paper's agg)."""
-    n = lax.axis_size(axis)
+    n = _axis_size(axis)
     for rnd in topology.tree_gather_rounds(n, root):
-        recv = lax.ppermute(x, axis, rnd)
-        me = lax.axis_index(axis)
+        recv = _ppermute(x, axis, rnd)
+        me = _axis_index(axis)
         dsts = jnp.array([d for _, d in rnd], jnp.int32)
         is_dst = jnp.any(me == dsts)
         x = jnp.where(is_dst, x + recv, x)
@@ -91,35 +87,36 @@ def tree_gather_axis(x: Array, axis: str, root: int = 0) -> Array:
     """Binary-tree concat-gather to ``root`` (paper Fig 4 agg): message
     doubles each round, exactly the paper's growing aggregation buffers.
     Returns (n*shard,) on root; junk elsewhere (masked by caller)."""
-    n = lax.axis_size(axis)
-    me = lax.axis_index(axis)
+    n = _axis_size(axis)
+    me = _axis_index(axis)
     flat = x.reshape(-1)
     local = flat.shape[0]
     buf = flat
     step = 1
     while step < n:
         # senders: ranks at odd multiples of `step` (relative to root)
-        rel = (me - root) % n
         pairs = []
         for i in range(0, n, 2 * step):
             j = i + step
             if j < n:
                 pairs.append((((j + root) % n), ((i + root) % n)))
-        recv = lax.ppermute(buf, axis, pairs)
+        recv = _ppermute(buf, axis, pairs)
         # receivers append; non-receivers keep garbage (masked at the end)
         buf = jnp.concatenate([buf, recv], axis=0)
         step *= 2
     if buf.shape[0] < n * local:  # non-power-of-two: pad
         buf = jnp.pad(buf, (0, n * local - buf.shape[0]))
-    return jnp.where(me == root, buf[: n * local],
-                     jnp.zeros((n * local,), x.dtype))
+    # blocks accumulate in root-relative (logical) order; roll back so the
+    # concat is in physical rank order for any root
+    full = jnp.roll(buf[: n * local].reshape(n, local), root, 0).reshape(-1)
+    return jnp.where(me == root, full, jnp.zeros((n * local,), x.dtype))
 
 
 def ring_allgather_axis(x: Array, axis: str) -> Array:
     """Ring all-gather via n-1 ppermutes (bandwidth-optimal reference for
     the benchmark harness)."""
-    n = lax.axis_size(axis)
-    me = lax.axis_index(axis)
+    n = _axis_size(axis)
+    me = _axis_index(axis)
     flat = x.reshape(-1)
     local = flat.shape[0]
     out = jnp.zeros((n, local), x.dtype)
@@ -127,7 +124,7 @@ def ring_allgather_axis(x: Array, axis: str) -> Array:
     block = flat
     perm = [(i, (i + 1) % n) for i in range(n)]
     for k in range(1, n):
-        block = lax.ppermute(block, axis, perm)
+        block = _ppermute(block, axis, perm)
         src = (me - k) % n
         out = lax.dynamic_update_slice(out, block[None], (src, 0))
     return out.reshape((n,) + x.shape)
@@ -137,34 +134,46 @@ def ring_allgather_axis(x: Array, axis: str) -> Array:
 # two-level ("node-aware" -> "pod-aware") compositions
 # ---------------------------------------------------------------------------
 
-def _inner_axes(mesh: Mesh, axes: Optional[Sequence[str]]) -> Tuple[str, ...]:
-    if axes is not None:
-        return tuple(axes)
-    return tuple(a for a in mesh.axis_names if a != "pod")
+def _axis_roots(root: int, axes: Sequence[str]) -> dict:
+    """Decompose a *global* (linear, C-order over ``axes``) root rank
+    into its per-axis coordinates — the root each per-axis schedule
+    needs.  Sizes are static inside shard_map."""
+    sizes = [_axis_size(a) for a in axes]
+    coords = {}
+    for a, n in zip(reversed(tuple(axes)), reversed(sizes)):
+        coords[a] = root % n
+        root //= n
+    return coords
 
 
 def two_level_bcast(x: Array, *, pod_axis: Optional[str], in_axes:
                     Sequence[str], tree: bool = True, root: int = 0) -> Array:
     """Paper Fig 6: broadcast among pod leaders first (off-node level),
-    then within each pod (in-node level)."""
+    then within each pod (in-node level).  ``root`` is the global linear
+    rank (C-order, pod-major); it is decomposed into per-axis roots so
+    each level propagates from the fiber that actually holds the data."""
     fn = tree_bcast_axis if tree else serial_bcast_axis
+    axes = ((pod_axis,) if pod_axis else ()) + tuple(in_axes)
+    roots = _axis_roots(root, axes)
     if pod_axis is not None:
-        x = fn(x, pod_axis, root)
+        x = fn(x, pod_axis, roots[pod_axis])
     for a in in_axes:
-        x = fn(x, a, root)
+        x = fn(x, a, roots[a])
     return x
 
 
 def two_level_agg(x: Array, *, pod_axis: Optional[str],
                   in_axes: Sequence[str], root: int = 0) -> Array:
     """Paper Fig 4: binary-tree aggregation, in-node level first, then
-    across nodes.  Concat semantics; result lands on global rank 0.
-    Axes are gathered innermost-first so block order matches the C-order
-    rank layout (rank = (((pod) * data) + d) * model + m)."""
+    across nodes.  Concat semantics; the result lands on global rank
+    ``root`` in physical C-order (rank = (((pod) * data) + d) * model
+    + m), axes gathered innermost-first to match that layout."""
+    axes = ((pod_axis,) if pod_axis else ()) + tuple(in_axes)
+    roots = _axis_roots(root, axes)
     for a in reversed(tuple(in_axes)):
-        x = tree_gather_axis(x, a, root)
+        x = tree_gather_axis(x, a, roots[a])
     if pod_axis is not None:
-        x = tree_gather_axis(x, pod_axis, root)
+        x = tree_gather_axis(x, pod_axis, roots[pod_axis])
     return x
 
 
@@ -179,15 +188,14 @@ def hier_allreduce_local(x: Array, *, pod_axis: Optional[str],
     flat = x.reshape(-1)
     n_in = 1
     for a in in_axes:
-        n_in *= lax.axis_size(a)
+        n_in *= _axis_size(a)
     if flat.shape[0] % n_in or n_in == 1:
-        y = lax.psum(x, tuple(in_axes))
+        y = _psum(x, tuple(in_axes))
         if pod_axis is not None:
-            y = lax.psum(y, pod_axis)
+            y = _psum(y, pod_axis)
         return y
     # in-pod reduce-scatter over the (flattened) composite axis
-    shard = lax.psum_scatter(flat.reshape(n_in, -1), tuple(in_axes),
-                             scatter_dimension=0, tiled=False)
+    shard = _psum_scatter(flat.reshape(n_in, -1), tuple(in_axes))
     if pod_axis is not None:
         if compress == "int8":
             scale = jnp.maximum(jnp.max(jnp.abs(shard)), 1e-8) / 127.0
@@ -197,61 +205,24 @@ def hier_allreduce_local(x: Array, *, pod_axis: Optional[str],
             shard = lax.psum(q, pod_axis).astype(shard.dtype) * scale
         else:
             shard = lax.psum(shard, pod_axis)
-    out = lax.all_gather(shard, tuple(in_axes), axis=0, tiled=True)
+    out = _all_gather(shard, tuple(in_axes))
     return out.reshape(shape)
 
 
 def tree_allreduce_local(x: Array, *, pod_axis: Optional[str],
-                         in_axes: Sequence[str]) -> Array:
+                         in_axes: Sequence[str],
+                         tree_bcast: bool = True) -> Array:
     """Paper-faithful all-reduce = agg (tree reduce to leader, Fig 4) +
     broadcast (tree, Fig 6) — what pPython programs compose from agg() and
-    bcast()."""
+    bcast().  ``tree_bcast=False`` uses the serialized initial broadcast
+    (Fig 7) for the distribution half, so the 'serial' transport is a
+    real P-1-round baseline rather than an alias of 'tree'."""
+    bcast = tree_bcast_axis if tree_bcast else serial_bcast_axis
     for a in in_axes:
         x = tree_reduce_axis(x, a)
     if pod_axis is not None:
         x = tree_reduce_axis(x, pod_axis)
-        x = tree_bcast_axis(x, pod_axis)
+        x = bcast(x, pod_axis)
     for a in in_axes:
-        x = tree_bcast_axis(x, a)
+        x = bcast(x, a)
     return x
-
-
-# ---------------------------------------------------------------------------
-# jit-level wrappers (build their own shard_map)
-# ---------------------------------------------------------------------------
-
-def _wrap(fn, mesh: Mesh, replicated_out: bool = True):
-    spec = P()  # value replicated per rank; payloads differ only at root
-
-    def run(x):
-        return shard_map(fn, mesh=mesh, in_specs=(spec,), out_specs=spec,
-                         check_vma=False)(x)
-    return run
-
-
-def allreduce_tree(x, mesh: Mesh, compress: Optional[str] = None):
-    """Replicated-in, replicated-out hierarchical tree all-reduce of a
-    *sharded-by-interpretation* value: callers hold per-device partials."""
-    pod = "pod" if "pod" in mesh.axis_names else None
-    in_axes = tuple(a for a in mesh.axis_names if a != "pod")
-    fn = functools.partial(tree_allreduce_local, pod_axis=pod,
-                           in_axes=in_axes)
-    return _wrap(fn, mesh)(x)
-
-
-def allreduce_hier(x, mesh: Mesh, compress: Optional[str] = None):
-    pod = "pod" if "pod" in mesh.axis_names else None
-    in_axes = tuple(a for a in mesh.axis_names if a != "pod")
-    fn = functools.partial(hier_allreduce_local, pod_axis=pod,
-                           in_axes=in_axes, compress=compress)
-    return _wrap(fn, mesh)(x)
-
-
-def hier_allreduce_tree(tree, mesh: Mesh, already_summed: bool = False,
-                        compress: Optional[str] = None):
-    """Apply hier_allreduce leaf-wise to a pytree of gradients.  When
-    ``already_summed`` (GSPMD produced global grads) this is the identity
-    — present so the trainer can route every mode through one call site."""
-    if already_summed:
-        return tree
-    return jax.tree.map(lambda g: allreduce_hier(g, mesh, compress), tree)

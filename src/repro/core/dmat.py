@@ -21,9 +21,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax import shard_map
 
-from repro.core import collectives as coll
 from repro.core.dmap import Dmap
 
 Array = jax.Array
@@ -68,34 +66,44 @@ class Dmat:
         """One rank's padded local block (owned region + halo)."""
         return self.storage[rank]
 
-    def agg(self) -> Array:
-        """Aggregate onto the leader (paper's agg(), Fig 4): two-level
-        binary-tree gather — result is the global array on rank 0, zeros
-        elsewhere (SPMD-observable form of 'returns on the leader')."""
-        mesh = self.mesh
-        pod = "pod" if "pod" in mesh.axis_names else None
-        in_axes = tuple(a for a in mesh.axis_names if a != "pod")
+    def _comm(self):
+        # deferred import: repro.comms' transports use the collective
+        # primitives from this package (comms -> core.collectives ->
+        # core.__init__ -> dmat would cycle at module level)
+        from repro.comms import Communicator
+        return Communicator.for_mesh(self.mesh, "tree")
+
+    def _storage_spec(self):
+        return P(tuple(self.mesh.axis_names))
+
+    def _comm_gather(self, op: str) -> Array:
+        """Run a concat-gather comm op over the storage, then reorder the
+        full buffer to global indexing (cheap gather; only ranks the op
+        delivered to hold data)."""
+        comm = self._comm()
 
         def body(block):
-            flat = coll.two_level_agg(block.reshape(-1), pod_axis=pod,
-                                      in_axes=in_axes)
-            return flat.reshape((-1,) + block.shape[1:])
+            return getattr(comm, op)(block).reshape(
+                (-1,) + block.shape[1:])
 
-        gathered = shard_map(
-            body, mesh=mesh,
-            in_specs=(P(tuple(mesh.axis_names)),),
-            out_specs=P(tuple(mesh.axis_names)),
-            check_vma=False)(self.storage)
-        # gathered: full storage on rank 0 (replicated layout on dim 0);
-        # reorder to global indexing (cheap gather, leader only has data)
+        gathered = comm.run(body, self.storage,
+                            in_specs=(self._storage_spec(),),
+                            out_specs=self._storage_spec())
         rank, locals_ = self.dmap.global_index_arrays(self.shape)
         return gathered[(jnp.asarray(rank),)
                         + tuple(jnp.asarray(l) for l in locals_)]
 
+    def agg(self) -> Array:
+        """Aggregate onto the leader (paper's agg(), Fig 4): two-level
+        binary-tree gather — result is the global array on rank 0, zeros
+        elsewhere (SPMD-observable form of 'returns on the leader')."""
+        return self._comm_gather("agg")
+
     def agg_all(self) -> Array:
-        """agg + tree broadcast of the result (all ranks get the global
-        array) — the paper's agg() followed by bcast."""
-        return self.to_global()
+        """agg + tree broadcast of the result — every rank gets the full
+        storage through the comm layer (the paper's agg() then bcast),
+        unlike ``to_global`` which leaves the gather to GSPMD."""
+        return self._comm_gather("allgather")
 
     def redistribute(self, new_map: Dmap) -> "Dmat":
         """Remap between any two block-cyclic-overlapped maps: composed
@@ -137,10 +145,8 @@ class Dmat:
         return self._binop(o, jnp.subtract)
 
     def sum(self) -> Array:
-        """Global sum (halo + padding excluded via a validity mask)."""
-        n = _ndev(self.mesh)
-        _, valid = self.dmap.storage_index_arrays(self.shape, n)
-        # padding gathers duplicate entries; count each global element once
+        """Global sum: gather each global element from its owner exactly
+        once, so halo and padding duplicates never double-count."""
         rank, locals_ = self.dmap.global_index_arrays(self.shape)
         vals = self.storage[(jnp.asarray(rank),)
                             + tuple(jnp.asarray(l) for l in locals_)]

@@ -20,7 +20,10 @@ def main() -> None:
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--ckpt", default="/tmp/repro_ckpt")
     ap.add_argument("--grad-comms", default="auto",
-                    choices=("auto", "tree", "hier", "hier_int8"))
+                    choices=("auto", "native", "tree", "serial", "hier",
+                             "hier_int8"),
+                    help="'auto' = GSPMD; otherwise the transport a "
+                         "CommSpec binds to the batch-axis Communicator")
     ap.add_argument("--checkpoint-every", type=int, default=50)
     ap.add_argument("--reduced", action="store_true",
                     help="reduced config (CPU-scale smoke)")

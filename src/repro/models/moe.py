@@ -31,7 +31,9 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
-from jax import shard_map
+
+from repro.comms.compat import (axis_index, axis_size,
+                                shard_map)
 
 Array = jax.Array
 
@@ -108,7 +110,7 @@ def _gather_fsdp(w: Array, axis: int, fsdp_axes: Sequence[str],
     for a in fsdp_axes:
         q = lax.all_gather(q, a, axis=axis, tiled=True)
         scale = lax.all_gather(scale, a, axis=axis, tiled=True)
-        nsh *= lax.axis_size(a)
+        nsh *= axis_size(a)
     shp = q.shape
     split = shp[:axis] + (nsh, blk) + shp[axis + 1:]
     qs = q.reshape(split).astype(jnp.bfloat16)
@@ -200,7 +202,7 @@ def _moe_replicated_local(x: Array, wr: Array, w1: Array, w3: Array,
     Tl, D = x.shape
     M, E = model_size, num_experts
     E_loc = E // M
-    my = lax.axis_index(model_axis)
+    my = axis_index(model_axis)
     w1 = _gather_fsdp(w1, 2, fsdp_axes, gather_dtype)
     w3 = _gather_fsdp(w3, 2, fsdp_axes, gather_dtype)
     w2 = _gather_fsdp(w2, 1, fsdp_axes, gather_dtype)
@@ -275,8 +277,7 @@ def moe_ffn(params: Dict[str, Array], x: Array, *, top_k: int,
         local, mesh=mesh,
         in_specs=(x_spec, P(None, None), expert_spec1, expert_spec1,
                   expert_spec2),
-        out_specs=(x_spec, P()),
-        check_vma=False)
+        out_specs=(x_spec, P()))
     return fn(x, params["wr"], params["we1"], params["we3"], params["we2"])
 
 

@@ -11,7 +11,10 @@ A light continuous-batching engine over the Model API:
 
 The multi-host production layout shards slots over the batch axes and
 the KV cache per partition.py; this engine is what examples/serve_lm.py
-and the decode benchmarks drive.
+and the decode benchmarks drive.  Host-side admission control is
+per-process, so cross-host agreement points (weights loaded, drain)
+go through the mesh-bound ``Communicator`` barrier rather than ad-hoc
+blocking on arrays.
 """
 from __future__ import annotations
 
@@ -23,6 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh
 
+from repro.comms import Communicator
 from repro.configs.base import ArchConfig
 from repro.models.model import Model
 
@@ -41,6 +45,7 @@ class Engine:
                  max_len: int, seed: int = 0):
         self.cfg = cfg
         self.model = Model(cfg, mesh)
+        self.comm = Communicator.for_mesh(mesh)
         self.slots = slots
         self.max_len = max_len
         self.params = None
@@ -56,6 +61,8 @@ class Engine:
     def load(self, params) -> None:
         self.params = params
         self.cache = self.model.init_cache(self.slots, self.max_len)
+        # every rank must hold weights + cache before admission starts
+        self.comm.sync()
 
     # ------------------------------------------------------------- admit
     def _scatter_slot(self, big, one, slot: int):
@@ -142,4 +149,5 @@ class Engine:
             for rid in list(self.requests):
                 if rid not in self.slot_of:
                     results[rid] = self.requests.pop(rid).out_tokens
+        self.comm.sync()       # drain: all ranks idle before returning
         return results

@@ -5,7 +5,7 @@ lowers; the Trainer loop wraps them with checkpointing/fault handling.
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
@@ -41,12 +41,13 @@ def make_train_step(model: Model, ocfg: OptimizerConfig,
     (params, opt_state, metrics).
 
     ``grad_comms`` selects the data-parallel gradient exchange:
-      * ``auto``      — GSPMD inserts flat all-reduces (mpi4py analogue);
-      * ``tree``      — paper-faithful: per-shard grads computed inside
-                        shard_map (model axis left automatic) and summed
-                        with the two-level binary-tree agg+bcast;
-      * ``hier``      — beyond-paper reduce-scatter hierarchy;
-      * ``hier_int8`` — hier with int8 cross-pod compression.
+      * ``auto``       — GSPMD inserts flat all-reduces (mpi4py analogue);
+      * anything else  — an explicit exchange through a mesh-bound
+        :class:`repro.comms.Communicator` over the batch axes, with the
+        algorithm chosen by ``CommSpec.from_flag``: ``tree`` (paper-
+        faithful two-level binary agg+bcast), ``hier``/``hier_int8``
+        (beyond-paper reduce-scatter hierarchy, optionally compressed),
+        ``native``/``serial`` for baselines.
     The explicit modes require non-FSDP params (replicated over the batch
     axes); FSDP archs keep 'auto' (their grads are sharded, and GSPMD's
     reduce-scatter is already the hierarchy).
@@ -54,7 +55,7 @@ def make_train_step(model: Model, ocfg: OptimizerConfig,
     cfg = model.cfg
     mesh = model.mesh
     mb = effective_microbatches(cfg, global_batch, model.mesh)
-    explicit = grad_comms in ("tree", "hier", "hier_int8")
+    explicit = grad_comms != "auto"
     if explicit and cfg.use_fsdp:
         raise ValueError("explicit grad_comms needs replicated (non-FSDP) "
                          "params; use grad_comms='auto' for FSDP archs")
@@ -63,36 +64,24 @@ def make_train_step(model: Model, ocfg: OptimizerConfig,
         return model.train_loss(params, mbatch)
 
     if explicit:
-        from jax import shard_map
-        from repro.comms import backend as backend_lib
+        from repro.comms import CommSpec, Communicator
         baxes = partition.mesh_batch_axes(mesh, cfg)
-        pod = "pod" if "pod" in mesh.axis_names else None
-        in_ax = tuple(a for a in baxes if a != "pod")
-        nshards = 1
-        for a in baxes:
-            nshards *= mesh.shape[a]
-        be = backend_lib.for_name(
-            {"tree": "tree", "hier": "hier", "hier_int8": "hier_int8"}
-            [grad_comms], pod, in_ax)
+        comm = Communicator(mesh, CommSpec.from_flag(grad_comms),
+                            axes=baxes)
 
         def local_grad(params, mbatch):
             (loss, _), g = jax.value_and_grad(loss_fn, has_aux=True)(
                 params, mbatch)
-            g = jax.tree.map(lambda t: be.allreduce(t.astype(jnp.float32))
-                             / nshards, g)
-            loss = be.allreduce(loss) / nshards
+            g = comm.allreduce(
+                jax.tree.map(lambda t: t.astype(jnp.float32), g))
+            g = jax.tree.map(lambda t: t / comm.size, g)
+            loss = comm.allreduce(loss) / comm.size
             return loss, g
 
         batch_specs = {k: P(baxes, None) for k in ("tokens", "labels")}
-
-        def grad_of(params, mbatch):
-            # manual over the batch axes; model/TP axes stay automatic
-            return shard_map(
-                local_grad, mesh=mesh,
-                in_specs=(P(), batch_specs),
-                out_specs=(P(), P()),
-                axis_names=set(baxes),
-                check_vma=False)(params, mbatch)
+        # manual over the batch axes; model/TP axes stay automatic
+        grad_of = comm.wrap(local_grad, in_specs=(P(), batch_specs),
+                            out_specs=(P(), P()), manual_axes=comm.axes)
     else:
         def grad_of(params, mbatch):
             (loss, _), g = jax.value_and_grad(loss_fn, has_aux=True)(

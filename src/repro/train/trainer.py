@@ -3,9 +3,11 @@
 Production concerns implemented (and exercised by tests/examples):
   * jit'd init with target shardings (params never materialize unsharded);
   * microbatched train_step (see steps.py) with selectable gradient
-    exchange: 'auto' (GSPMD flat — the mpi4py analogue), 'tree' (paper-
-    faithful two-level binary trees), 'hier'/'hier_int8' (beyond-paper
-    reduce-scatter hierarchy with optional cross-pod compression);
+    exchange: 'auto' (GSPMD flat — the mpi4py analogue) or any comms
+    transport routed through a mesh-bound repro.comms.Communicator:
+    'tree' (paper-faithful two-level binary trees), 'hier'/'hier_int8'
+    (beyond-paper reduce-scatter hierarchy with optional cross-pod
+    compression), 'native'/'serial' baselines;
   * checkpoint/restart: async sharded checkpoints every N steps, auto
     -resume from LATEST, crash-safe atomic commit;
   * failure injection: ``failure_at`` raises mid-run (tests restart);
@@ -39,7 +41,8 @@ class TrainerConfig:
     total_steps: int = 100
     checkpoint_every: int = 20
     ckpt_dir: str = "/tmp/repro_ckpt"
-    grad_comms: str = "auto"      # auto | tree | hier | hier_int8
+    grad_comms: str = "auto"      # 'auto' (GSPMD) or a comms transport
+                                  # name -> CommSpec.from_flag in steps.py
     log_every: int = 10
     keep_last: int = 3
     straggler_factor: float = 3.0
@@ -156,7 +159,9 @@ class Trainer:
                         step, {"params": params, "opt": opt_state})
         finally:
             prefetch.close()
-        self.checkpointer.wait()
+            # flush any in-flight async save: a crash mid-run must still
+            # commit the last snapshot, or failover restores a stale step
+            self.checkpointer.wait()
         ckpt_lib.save(self.tcfg.ckpt_dir, tc.total_steps - 1,
                       {"params": params, "opt": opt_state},
                       keep_last=tc.keep_last)

@@ -1,0 +1,24 @@
+"""Test-suite bootstrap.
+
+If `hypothesis` is installed, it is used as-is.  If not (minimal
+containers), the deterministic fallback in tests/_hypothesis_fallback.py
+is registered under the ``hypothesis`` name BEFORE test modules import
+it, so the property-test modules still collect and run.  Install the
+real package via requirements-dev.txt for genuine input-space search.
+"""
+import os
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for p in (ROOT, os.path.join(ROOT, "src")):
+    if p not in sys.path:
+        sys.path.insert(0, p)
+
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    from tests import _hypothesis_fallback
+
+    sys.modules["hypothesis"] = _hypothesis_fallback
+    sys.modules["hypothesis.strategies"] = _hypothesis_fallback
+    _hypothesis_fallback.strategies = _hypothesis_fallback

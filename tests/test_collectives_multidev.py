@@ -4,18 +4,19 @@ from tests._subproc import run_py
 
 CODE = """
 import jax, jax.numpy as jnp, numpy as np
-from jax import shard_map
 from jax.sharding import PartitionSpec as P
+from repro.comms.compat import shard_map
+from repro.comms.topology import Topology
 from repro.core import collectives as coll
 from repro.launch.mesh import make_local_mesh
 
 mesh = make_local_mesh({data}, {model}, pod={pod})
 axes = tuple(mesh.axis_names)
-pod = "pod" if "pod" in axes else None
-in_axes = tuple(a for a in axes if a != "pod")
+topo = Topology.from_mesh(mesh)
+pod, in_axes = topo.pod_axis, topo.in_axes
 v = jnp.arange(8 * 5, dtype=jnp.float32).reshape(8, 5) + 1
 sm = lambda f: shard_map(f, mesh=mesh, in_specs=(P(axes),),
-                         out_specs=P(axes), check_vma=False)
+                         out_specs=P(axes))
 flat = sm(lambda a: jax.lax.psum(a, axes))(v)
 tree = sm(lambda a: coll.tree_allreduce_local(a, pod_axis=pod, in_axes=in_axes))(v)
 hier = sm(lambda a: coll.hier_allreduce_local(a, pod_axis=pod, in_axes=in_axes))(v)
