@@ -1,82 +1,21 @@
-"""Paper Fig 5 (aggregation) + Fig 7 (broadcast).
-
-Measured on virtual devices (2..8 ranks x {8 B, 8 KB, 8 MB} per-process)
-through the public Communicator surface — one transport per paper
-variant, selected from the registry:
-  * agg:   'tree' (paper Fig 4 two-level binary gather)  vs  'native'
-           all-gather (the mpi4py analogue);
-  * bcast: 'serial' (paper 'initial'), 'tree' (paper 'optimized'),
-           'native' replication.
-
-Modeled to 256/512/768 ranks via the two-level cost model (rounds x
-bytes / per-level bandwidth) — the paper's sweep reaches 768 ranks and
-this container has 8 useful virtual devices, so large scales are modeled
-exactly the way §Roofline models collectives.
-"""
+"""Paper Fig 5 (aggregation), Fig 7 (broadcast) and Fig 6
+(scatter/gather) — thin shim over the registered ``agg``/``bcast``/
+``scatter`` cases in :mod:`repro.bench.cases`; run the whole suite with
+``python -m repro.bench``."""
 import os
 
+CASES = ("agg", "bcast", "scatter")
+NDEV = 8
+
 if __name__ == "__main__" and "XLA_FLAGS" not in os.environ:
-    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-
-import jax
-import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
-
-from benchmarks.common import DCI_BW, ICI_BW, row, time_fn
-from repro.comms import Communicator
-from repro.core import topology
-
-SIZES = [8, 8 * 1024, 8 * 1024 * 1024]
-
-
-def bench_ranks(n: int) -> None:
-    mesh = jax.make_mesh((n,), ("r",))
-    comms = {name: Communicator(mesh, name)
-             for name in ("native", "tree", "serial")}
-    spec = P("r")
-
-    def jit_op(comm, op):
-        def body(a):
-            out = getattr(comm, op)(a)
-            # reduce to a tiny per-rank value so timing isn't dominated
-            # by materializing the gathered buffer
-            return out.reshape(1, -1).mean(1, keepdims=True)
-        return jax.jit(comm.wrap(body, in_specs=(spec,), out_specs=spec))
-
-    for size in SIZES:
-        elems = max(size // 4, 1)
-        x = jnp.ones((n, elems), jnp.float32)
-        row(f"agg_tree_r{n}_{size}B", time_fn(jit_op(comms["tree"],
-                                                     "agg"), x))
-        row(f"agg_native_r{n}_{size}B", time_fn(jit_op(comms["native"],
-                                                       "agg"), x))
-        for name in ("tree", "serial", "native"):
-            row(f"bcast_{name}_r{n}_{size}B",
-                time_fn(jit_op(comms[name], "bcast"), x))
-
-
-def modeled() -> None:
-    """Fig 7 extension: two-level model at pod scale (in-pod 256 ranks on
-    ICI, cross-pod on DCI)."""
-    for total in (64, 256, 512, 768):
-        n_local = min(total, 256)
-        n_global = max(total // 256, 1)
-        for size in SIZES:
-            t_tree = topology.two_level_cost(n_local, n_global, size,
-                                             ICI_BW, DCI_BW, tree=True)
-            t_serial = topology.two_level_cost(n_local, n_global, size,
-                                               ICI_BW, DCI_BW, tree=False)
-            row(f"bcast_model_tree_r{total}_{size}B", t_tree * 1e6,
-                f"speedup={t_serial / max(t_tree, 1e-12):.1f}x")
-            row(f"bcast_model_serial_r{total}_{size}B", t_serial * 1e6)
+    os.environ["XLA_FLAGS"] = \
+        f"--xla_force_host_platform_device_count={NDEV}"
 
 
 def main() -> None:
-    n_dev = len(jax.devices())
-    for n in (2, 4, 8):
-        if n <= n_dev:
-            bench_ranks(n)
-    modeled()
+    from repro.bench.runner import print_csv, run_cases_inline
+    print_csv(run_cases_inline(
+        CASES, profile=os.environ.get("REPRO_BENCH_PROFILE", "full")))
 
 
 if __name__ == "__main__":

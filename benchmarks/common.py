@@ -1,34 +1,22 @@
-"""Shared benchmark utilities.  Every benchmark prints CSV rows:
-``name,us_per_call,derived`` (derived = bandwidth GB/s or notes).
+"""Deprecated shim over :mod:`repro.bench.sampling` / :mod:`repro.bench.hw`.
+
+The benchmark implementations moved to ``src/repro/bench/cases.py``;
+``time_fn`` and the v5e link constants stay importable from here for
+one release so out-of-tree callers keep working.
 """
 from __future__ import annotations
 
-import time
 from typing import Callable
 
-import jax
+from repro.bench.hw import DCI_BW, DCI_LAT, ICI_BW, ICI_LAT  # noqa: F401
+from repro.bench.sampling import sample, stats_us
 
 
 def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
     """Median wall-time (us) of a jitted call."""
-    for _ in range(warmup):
-        jax.block_until_ready(fn(*args))
-    times = []
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn(*args))
-        times.append(time.perf_counter() - t0)
-    times.sort()
-    return times[len(times) // 2] * 1e6
+    return stats_us(sample(fn, *args, warmup=warmup, iters=iters))[
+        "median_us"]
 
 
 def row(name: str, us: float, derived: str = "") -> None:
     print(f"{name},{us:.1f},{derived}")
-
-
-# v5e model constants for the modeled (256..768-rank) extension of the
-# paper's sweep — CPU cannot measure those scales.
-ICI_BW = 50e9      # B/s per chip (in-pod)
-DCI_BW = 6.25e9    # B/s per chip (cross-pod)
-ICI_LAT = 1e-6     # s per hop
-DCI_LAT = 10e-6

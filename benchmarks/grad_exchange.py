@@ -1,44 +1,20 @@
-"""Trainer-level extension of the paper's study: gradient all-reduce via
-flat native (mpi4py analogue) vs paper tree (agg+bcast) vs hierarchical
-reduce-scatter (beyond-paper), plus int8-compressed cross-pod — all
-driven through the public Communicator API exactly as train/steps.py
-wires it (a CommSpec per mode, batch-axis topology).
-
-Reports measured time on an 8-device (2 pod x 2 data x 2 model) virtual
-mesh AND the HLO link bytes of each variant (from the roofline parser) —
-the quantity that actually scales to 512 chips.
-"""
+"""Trainer-level gradient-exchange comparison — thin shim over the
+registered ``grad_exchange`` case in :mod:`repro.bench.cases`; run the
+whole suite with ``python -m repro.bench``."""
 import os
 
+CASES = ("grad_exchange",)
+NDEV = 8
+
 if __name__ == "__main__" and "XLA_FLAGS" not in os.environ:
-    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-
-import jax
-import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
-
-from benchmarks.common import row, time_fn
-from repro.comms import CommSpec, Communicator
-from repro.roofline import hlo as hlo_lib
+    os.environ["XLA_FLAGS"] = \
+        f"--xla_force_host_platform_device_count={NDEV}"
 
 
 def main() -> None:
-    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
-    nbytes = 4 * 1024 * 1024
-    x = jnp.ones((8, nbytes // 4 // 8), jnp.float32)
-    spec = P(("pod", "data", "model"))
-
-    for name in ("native", "tree", "hier", "hier_int8"):
-        comm = Communicator(mesh, CommSpec.from_flag(name),
-                            axes=("pod", "data"))
-        f = jax.jit(comm.wrap(comm.allreduce, in_specs=(spec,),
-                              out_specs=spec))
-        us = time_fn(f, x)
-        an = hlo_lib.analyze(f.lower(x).compile().as_text(), pod_size=4,
-                             n_pods=2)
-        row(f"gradex_{name}_4MiB", us,
-            f"link={an['link_bytes']/2**20:.2f}MiB "
-            f"dci={an['dci_link_bytes']/2**20:.2f}MiB")
+    from repro.bench.runner import print_csv, run_cases_inline
+    print_csv(run_cases_inline(
+        CASES, profile=os.environ.get("REPRO_BENCH_PROFILE", "full")))
 
 
 if __name__ == "__main__":

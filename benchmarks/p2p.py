@@ -1,53 +1,20 @@
-"""Paper Fig 2/3: point-to-point bandwidth/latency sweep.
-
-Measured: the public Communicator ``send``/``recv`` surface (pPython
-SendMsg/RecvMsg over a scheduled ppermute hop) between two (virtual)
-devices across message sizes — exactly the API the PGAS layer programs
-against, per the OMB-Py discipline of benchmarking the user-visible
-functions rather than private internals.  Modeled: v5e ICI (in-pod hop)
-and DCI (cross-pod hop) times for the same sizes, the roofline-level
-counterpart of the paper's local-vs-Lustre / TCP-vs-RoCE ablations.
-"""
+"""Paper Fig 2/3 (p2p bandwidth/latency) — thin shim over the registered
+``p2p`` case in :mod:`repro.bench.cases`; run the whole suite with
+``python -m repro.bench``."""
 import os
 
+CASES = ("p2p",)
+NDEV = 2
+
 if __name__ == "__main__" and "XLA_FLAGS" not in os.environ:
-    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
-
-import jax
-import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
-
-from benchmarks.common import (DCI_BW, DCI_LAT, ICI_BW, ICI_LAT, row,
-                               time_fn)
-from repro.comms import Communicator
+    os.environ["XLA_FLAGS"] = \
+        f"--xla_force_host_platform_device_count={NDEV}"
 
 
 def main() -> None:
-    mesh = jax.make_mesh((2,), ("x",))
-    comm = Communicator(mesh)
-    sizes = [16 * 4 ** i for i in range(12)]          # 16 B .. 64 MB
-
-    for size in sizes:
-        n = max(size // 4, 1)
-        x = jnp.zeros((2, n), jnp.float32)
-
-        def oneway(v):
-            return comm.send(v, dst=1, src=0)
-
-        def roundtrip(v):
-            return comm.recv(comm.send(v, dst=1, src=0), 1, dst=0)
-
-        spec = P("x")
-        f = jax.jit(comm.wrap(oneway, in_specs=(spec,), out_specs=spec))
-        g = jax.jit(comm.wrap(roundtrip, in_specs=(spec,), out_specs=spec))
-        us = time_fn(f, x)
-        bw = size / (us * 1e-6) / 1e9
-        row(f"p2p_send_{size}B", us, f"{bw:.3f}GB/s")
-        row(f"p2p_roundtrip_{size}B", time_fn(g, x))
-        row(f"p2p_model_ici_{size}B", (ICI_LAT + size / ICI_BW) * 1e6,
-            f"{size / (ICI_LAT + size / ICI_BW) / 1e9:.3f}GB/s")
-        row(f"p2p_model_dci_{size}B", (DCI_LAT + size / DCI_BW) * 1e6,
-            f"{size / (DCI_LAT + size / DCI_BW) / 1e9:.3f}GB/s")
+    from repro.bench.runner import print_csv, run_cases_inline
+    print_csv(run_cases_inline(
+        CASES, profile=os.environ.get("REPRO_BENCH_PROFILE", "full")))
 
 
 if __name__ == "__main__":

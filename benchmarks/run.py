@@ -1,15 +1,14 @@
-"""Benchmark harness — one benchmark per paper table/figure.
+"""Deprecated shim — the harness lives in ``repro.bench`` now.
 
-    Fig 2/3 (p2p bw/latency)      -> benchmarks.p2p
-    Fig 5   (aggregation)         -> benchmarks.collective (agg_*)
-    Fig 7   (broadcast init/opt)  -> benchmarks.collective (bcast_*)
-    HPCC heritage (STREAM)        -> benchmarks.stream
-    trainer-level grad exchange   -> benchmarks.grad_exchange
-    roofline summary (§Roofline)  -> re-emitted from experiments/dryrun
+    python -m repro.bench --out BENCH_ci.json     # or: repro-bench
+    python -m repro.bench.compare RUN BASELINE    # regression gate
 
-Each sub-benchmark runs in its own subprocess with the virtual-device
-count it needs (the parent stays at 1 device).  Output: CSV rows
-``name,us_per_call,derived``.
+This wrapper keeps the historical entry point (``python benchmarks/
+run.py``) working: it forwards its arguments to ``python -m
+repro.bench`` (defaulting to the paper-faithful ``full`` profile, the
+old behavior) and propagates the exit code — including failures from
+the roofline re-emit, which the old harness swallowed behind a bare
+``except Exception``.
 """
 import os
 import subprocess
@@ -18,42 +17,16 @@ import sys
 HERE = os.path.dirname(os.path.abspath(__file__))
 ROOT = os.path.dirname(HERE)
 
-SUITES = [
-    ("benchmarks.p2p", 2),
-    ("benchmarks.collective", 8),
-    ("benchmarks.grad_exchange", 8),
-    ("benchmarks.stream", 1),
-]
-
 
 def main() -> None:
-    env_base = dict(os.environ)
-    env_base["PYTHONPATH"] = os.pathsep.join(
-        [os.path.join(ROOT, "src"), ROOT,
-         env_base.get("PYTHONPATH", "")])
-    print("name,us_per_call,derived")
-    failures = []
-    for mod, ndev in SUITES:
-        env = dict(env_base)
-        env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={ndev}"
-        r = subprocess.run([sys.executable, "-m", mod], env=env, cwd=ROOT)
-        if r.returncode:
-            failures.append(mod)
-    # roofline summary re-emit (no timing — derived column only)
-    try:
-        sys.path.insert(0, os.path.join(ROOT, "src"))
-        from repro.roofline import analysis
-        rows = [r for c in analysis.load_cells() if (r := analysis.roofline_row(c))]
-        for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
-            dom = r["dominant"]
-            print(f"roofline_{r['arch']}_{r['shape']},0.0,"
-                  f"bound={dom};frac={r['roofline_fraction']:.4f};"
-                  f"useful={r['useful_ratio']:.2f}")
-    except Exception as e:  # noqa: BLE001
-        print(f"roofline_summary,0.0,unavailable:{e}")
-    if failures:
-        print(f"FAILED_SUITES,{len(failures)},{';'.join(failures)}")
-        sys.exit(1)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (os.path.join(ROOT, "src"), ROOT,
+                    env.get("PYTHONPATH", "")) if p)
+    argv = sys.argv[1:] or ["--profile", "full"]
+    r = subprocess.run([sys.executable, "-m", "repro.bench", *argv],
+                       env=env, cwd=ROOT)
+    sys.exit(r.returncode)
 
 
 if __name__ == "__main__":

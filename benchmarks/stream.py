@@ -1,28 +1,20 @@
-"""HPCC-heritage STREAM triad (the paper's earlier study [29] used the
-HPC Challenge suite; we keep the local-bandwidth anchor): a = b + s*c."""
+"""HPCC-heritage STREAM triad — thin shim over the registered ``stream``
+case in :mod:`repro.bench.cases`; run the whole suite with
+``python -m repro.bench``."""
 import os
 
+CASES = ("stream",)
+NDEV = 1
+
 if __name__ == "__main__" and "XLA_FLAGS" not in os.environ:
-    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=1"
-
-import jax
-import jax.numpy as jnp
-
-from benchmarks.common import row, time_fn
+    os.environ["XLA_FLAGS"] = \
+        f"--xla_force_host_platform_device_count={NDEV}"
 
 
 def main() -> None:
-    for n in (1 << 20, 1 << 24):
-        b = jnp.ones((n,), jnp.float32)
-        c = jnp.ones((n,), jnp.float32)
-
-        @jax.jit
-        def triad(b, c):
-            return b + 3.0 * c
-
-        us = time_fn(triad, b, c)
-        gb = 3 * 4 * n / (us * 1e-6) / 1e9
-        row(f"stream_triad_{n}", us, f"{gb:.2f}GB/s")
+    from repro.bench.runner import print_csv, run_cases_inline
+    print_csv(run_cases_inline(
+        CASES, profile=os.environ.get("REPRO_BENCH_PROFILE", "full")))
 
 
 if __name__ == "__main__":

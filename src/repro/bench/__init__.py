@@ -1,0 +1,32 @@
+"""repro.bench — the paper's benchmark matrix as a first-class subsystem.
+
+The source paper is a *performance study*: its contribution is the
+Figs 2-7 sweeps comparing pPython's messaging against mpi4py.  This
+package makes that sweep declarative, reproducible, and enforceable:
+
+  * :mod:`repro.bench.registry` — each paper figure/table is a
+    :class:`BenchCase` (name, device count, figure, implementation);
+    size/rank/iteration budgets come from a named :class:`Profile`.
+  * :mod:`repro.bench.cases`    — the case implementations, driving the
+    public :class:`~repro.comms.Communicator` surface only (the OMB-Py
+    discipline: benchmark what users call, not private internals).
+  * :mod:`repro.bench.runner`   — executes cases in per-device-count
+    subprocesses (the parent never re-initializes jax), collects
+    warmup-discarded samples, reports median/p95/min + derived GB/s.
+  * :mod:`repro.bench.results`  — schema-versioned ``BENCH_*.json``
+    writer (git sha, jax version, device counts, per-case rows) plus
+    the legacy ``name,us_per_call,derived`` CSV on stdout.
+  * :mod:`repro.bench.compare`  — diffs a run against a committed
+    ``benchmarks/baseline.json`` and exits non-zero on relative
+    slowdown past a noise-tolerant threshold (the CI regression gate).
+
+Entry points: ``python -m repro.bench`` (or the ``repro-bench`` console
+script) to run; ``python -m repro.bench.compare RUN BASELINE`` to gate.
+This module imports no jax — only case implementations do, inside the
+subprocess that owns the right virtual-device count.
+"""
+from repro.bench.registry import (BenchCase, Profile, PROFILES, all_cases,
+                                  get_case, register_case)
+
+__all__ = ["BenchCase", "Profile", "PROFILES", "all_cases", "get_case",
+           "register_case"]

@@ -1,0 +1,105 @@
+"""CLI: ``python -m repro.bench`` / the ``repro-bench`` console script.
+
+    repro-bench --out BENCH_ci.json            # run suite, write artifact
+    repro-bench --profile full                 # paper-faithful sweep
+    repro-bench --cases p2p,bcast --no-csv     # subset, JSON only
+    repro-bench --baseline benchmarks/baseline.json --out ...   # run+gate
+    repro-bench --list                         # show registered cases
+
+Exit code: non-zero if any case subprocess failed, the roofline re-emit
+hit a real bug, or (with ``--baseline``) the regression gate tripped.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import Optional, Sequence
+
+from repro.bench import registry
+
+
+def _parse(argv: Optional[Sequence[str]]) -> argparse.Namespace:
+    p = argparse.ArgumentParser(
+        prog="repro-bench",
+        description="pPython-study benchmark suite (see repro/bench).")
+    p.add_argument("--out", metavar="FILE",
+                   help="write the schema-versioned JSON artifact here")
+    p.add_argument("--profile", default="ci",
+                   choices=sorted(registry.PROFILES),
+                   help="size/iteration budget (default: ci)")
+    p.add_argument("--cases", metavar="A,B,...",
+                   help="comma-separated case subset (default: all)")
+    p.add_argument("--no-csv", action="store_true",
+                   help="suppress the legacy CSV on stdout")
+    p.add_argument("--baseline", metavar="FILE",
+                   help="after running, gate against this baseline "
+                        "(see repro.bench.compare for thresholds)")
+    p.add_argument("--threshold", type=float, default=None,
+                   help="relative slowdown that fails the gate "
+                        "(with --baseline)")
+    p.add_argument("--noise-floor-us", type=float, default=None,
+                   help="ignore absolute deltas below this (with "
+                        "--baseline)")
+    p.add_argument("--list", action="store_true",
+                   help="list registered cases and exit")
+    p.add_argument("--child", action="store_true", help=argparse.SUPPRESS)
+    return p.parse_args(argv)
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    args = _parse(argv)
+    names = args.cases.split(",") if args.cases else None
+
+    if args.list:
+        for c in registry.all_cases():
+            print(f"{c.name:15s} {c.figure:8s} ndev={c.ndev}  "
+                  f"{c.description}")
+        return 0
+
+    if args.child:
+        from repro.bench.runner import child_main
+        return child_main(names or [c.name for c in registry.all_cases()],
+                          args.profile)
+
+    from repro.bench import results
+    from repro.bench.runner import print_csv, run_suite
+
+    doc, failures = run_suite(names, profile=args.profile)
+    if not args.no_csv:
+        print_csv(doc["rows"])
+
+    rc = 0
+    if failures:
+        # report before touching the artifact: a fully-failed suite has
+        # no rows and results.write would reject it, masking the cause
+        print(f"FAILED_SUITES,{len(failures)},{';'.join(failures)}")
+        rc = 1
+    if args.out:
+        if doc["rows"]:
+            results.write(doc, args.out)
+            print(f"# wrote {args.out} ({len(doc['rows'])} rows, "
+                  f"profile={doc['profile']}, sha={doc['git_sha'][:12]})",
+                  file=sys.stderr)
+        else:
+            print(f"# no rows collected; not writing {args.out}",
+                  file=sys.stderr)
+    if args.baseline and not doc["rows"]:
+        print("# no rows collected; skipping baseline compare",
+              file=sys.stderr)
+    elif args.baseline:
+        from repro.bench import compare
+        kw = {}
+        if args.threshold is not None:
+            kw["threshold"] = args.threshold
+        if args.noise_floor_us is not None:
+            kw["noise_floor_us"] = args.noise_floor_us
+        base = results.load(args.baseline)
+        report = compare.compare_docs(doc, base, **kw)
+        compare.print_report(report)
+        print(f"# gate: {'FAIL' if report['regressions'] else 'PASS'}")
+        rc = max(rc, 1 if report["regressions"] else 0)
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

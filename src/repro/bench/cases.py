@@ -1,0 +1,242 @@
+"""The paper's benchmark matrix as registered cases.
+
+    p2p            Fig 2/3   send/roundtrip size sweep + v5e link model
+    agg            Fig 5     tree vs native aggregation, 2..8 ranks
+    bcast          Fig 7     serial/tree/native broadcast + pod-scale model
+    scatter        Fig 6     scatter (per-transport bcast schedule) and
+                             gather-to-nonzero-root, tree vs native
+    grad_exchange  trainer   allreduce variants on the 2x2x2 pod mesh,
+                             with HLO link-byte accounting
+    stream         HPCC      STREAM triad local-bandwidth anchor
+
+Every measured case drives the public :class:`~repro.comms.Communicator`
+surface only (OMB-Py discipline).  jax is imported inside the bodies:
+this module's *metadata* must be importable in the parent process before
+any device initialization.
+"""
+from __future__ import annotations
+
+from repro.bench import hw
+from repro.bench.registry import BenchContext, register_case
+from repro.bench.sampling import gbps
+
+
+def _comm_op_fn(comm, op, spec, **kw):
+    """jit a single collective through ``comm.wrap``, reducing the output
+    to one tiny value per rank so timing isn't dominated by materializing
+    the gathered buffer."""
+    import jax
+
+    def body(a):
+        out = getattr(comm, op)(a, **kw)
+        return out.reshape(1, -1).mean(1, keepdims=True)
+    return jax.jit(comm.wrap(body, in_specs=(spec,), out_specs=spec))
+
+
+# ------------------------------------------------------------------ p2p
+
+
+@register_case("p2p", figure="fig2/3", ndev=2,
+               description="point-to-point send/roundtrip size sweep "
+                           "over Communicator send/recv")
+def run_p2p(ctx: BenchContext):
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from repro.comms import Communicator
+
+    mesh = jax.make_mesh((2,), ("x",))
+    comm = Communicator(mesh)
+    spec = P("x")
+
+    def oneway(v):
+        return comm.send(v, dst=1, src=0)
+
+    def roundtrip(v):
+        return comm.recv(comm.send(v, dst=1, src=0), 1, dst=0)
+
+    for size in ctx.profile.p2p_sizes:
+        n = max(size // 4, 1)
+        x = jnp.zeros((2, n), jnp.float32)
+        f = jax.jit(comm.wrap(oneway, in_specs=(spec,), out_specs=spec))
+        g = jax.jit(comm.wrap(roundtrip, in_specs=(spec,), out_specs=spec))
+        st = ctx.measure(f, x)
+        yield ctx.row(f"p2p_send_{size}B", ranks=2, size_bytes=size,
+                      stats=st, gbps=gbps(size, st["median_us"]))
+        yield ctx.row(f"p2p_roundtrip_{size}B", ranks=2, size_bytes=size,
+                      stats=ctx.measure(g, x))
+
+    if not ctx.profile.modeled:
+        return
+    for size in ctx.profile.p2p_sizes:
+        t_ici = hw.ICI_LAT + size / hw.ICI_BW
+        t_dci = hw.DCI_LAT + size / hw.DCI_BW
+        yield ctx.model_row(f"p2p_model_ici_{size}B", us=t_ici * 1e6,
+                            ranks=2, size_bytes=size,
+                            gbps=size / t_ici / 1e9)
+        yield ctx.model_row(f"p2p_model_dci_{size}B", us=t_dci * 1e6,
+                            ranks=2, size_bytes=size,
+                            gbps=size / t_dci / 1e9)
+
+
+# ----------------------------------------------------------- agg / bcast
+
+
+def _rank_sweep(ctx: BenchContext):
+    """(mesh, comms, spec, n) per rank count, transports shared."""
+    import jax
+    from jax.sharding import PartitionSpec as P
+
+    from repro.comms import Communicator
+
+    for n in ctx.rank_counts():
+        mesh = jax.make_mesh((n,), ("r",))
+        comms = {name: Communicator(mesh, name)
+                 for name in ("native", "tree", "serial")}
+        yield n, comms, P("r")
+
+
+def _per_rank_input(n: int, size: int):
+    import jax.numpy as jnp
+    return jnp.ones((n, max(size // 4, 1)), jnp.float32)
+
+
+@register_case("agg", figure="fig5", ndev=8,
+               description="aggregation: paper tree gather vs native "
+                           "all-gather, 2..8 ranks x per-rank sizes")
+def run_agg(ctx: BenchContext):
+    for n, comms, spec in _rank_sweep(ctx):
+        for size in ctx.profile.coll_sizes:
+            x = _per_rank_input(n, size)
+            for tname in ("tree", "native"):
+                st = ctx.measure(_comm_op_fn(comms[tname], "agg", spec), x)
+                yield ctx.row(f"agg_{tname}_r{n}_{size}B", transport=tname,
+                              ranks=n, size_bytes=size, stats=st)
+
+
+@register_case("bcast", figure="fig7", ndev=8,
+               description="broadcast: serial (paper initial) vs tree "
+                           "(optimized) vs native, plus pod-scale model")
+def run_bcast(ctx: BenchContext):
+    for n, comms, spec in _rank_sweep(ctx):
+        for size in ctx.profile.coll_sizes:
+            x = _per_rank_input(n, size)
+            for tname in ("tree", "serial", "native"):
+                st = ctx.measure(_comm_op_fn(comms[tname], "bcast", spec), x)
+                yield ctx.row(f"bcast_{tname}_r{n}_{size}B",
+                              transport=tname, ranks=n, size_bytes=size,
+                              stats=st)
+
+    if not ctx.profile.modeled:
+        return
+    # Fig 7 extension: two-level model at pod scale (in-pod 256 ranks on
+    # ICI, cross-pod on DCI)
+    from repro.core import topology
+
+    for total in (64, 256, 512, 768):
+        n_local = min(total, 256)
+        n_global = max(total // 256, 1)
+        for size in ctx.profile.coll_sizes:
+            t_tree = topology.two_level_cost(n_local, n_global, size,
+                                             hw.ICI_BW, hw.DCI_BW,
+                                             tree=True)
+            t_serial = topology.two_level_cost(n_local, n_global, size,
+                                               hw.ICI_BW, hw.DCI_BW,
+                                               tree=False)
+            yield ctx.model_row(
+                f"bcast_model_tree_r{total}_{size}B", us=t_tree * 1e6,
+                transport="tree", ranks=total, size_bytes=size,
+                note=f"speedup={t_serial / max(t_tree, 1e-12):.1f}x")
+            yield ctx.model_row(
+                f"bcast_model_serial_r{total}_{size}B", us=t_serial * 1e6,
+                transport="serial", ranks=total, size_bytes=size)
+
+
+# ------------------------------------------------------ scatter / gather
+
+
+@register_case("scatter", figure="fig6", ndev=8,
+               description="scatter (root distributes blocks; schedule "
+                           "follows the transport's bcast) and gather to "
+                           "a non-zero root")
+def run_scatter(ctx: BenchContext):
+    for n, comms, spec in _rank_sweep(ctx):
+        for size in ctx.profile.coll_sizes:
+            x = _per_rank_input(n, size)
+            for tname in ("tree", "serial", "native"):
+                st = ctx.measure(
+                    _comm_op_fn(comms[tname], "scatter", spec), x)
+                yield ctx.row(f"scatter_{tname}_r{n}_{size}B",
+                              transport=tname, ranks=n, size_bytes=size,
+                              stats=st)
+            # gather-to-root at the far end of the rank line (root=n-1):
+            # exercises the rotated tree schedule, the Fig 6 direction
+            # the agg case (root=0) does not cover
+            for tname in ("tree", "native"):
+                st = ctx.measure(
+                    _comm_op_fn(comms[tname], "agg", spec, root=n - 1), x)
+                yield ctx.row(f"gather_root{n - 1}_{tname}_r{n}_{size}B",
+                              transport=tname, ranks=n, size_bytes=size,
+                              stats=st)
+
+
+# -------------------------------------------------------- grad exchange
+
+
+@register_case("grad_exchange", figure="trainer", ndev=8,
+               description="gradient allreduce variants on the pod mesh "
+                           "with HLO link-byte accounting")
+def run_grad_exchange(ctx: BenchContext):
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from repro.comms import CommSpec, Communicator
+    from repro.roofline import hlo as hlo_lib
+
+    if ctx.ndev >= 8:
+        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+        axes, pod_size, n_pods = ("pod", "data"), 4, 2
+    else:  # tiny/test budget: batch-axis-only exchange, no pod level
+        mesh = jax.make_mesh((ctx.ndev,), ("data",))
+        axes, pod_size, n_pods = ("data",), ctx.ndev, 1
+    ranks = ctx.ndev if ctx.ndev < 8 else 8
+    nbytes = ctx.profile.gradex_bytes
+    x = jnp.ones((ranks, max(nbytes // 4 // ranks, 1)), jnp.float32)
+    spec = P(tuple(mesh.axis_names))
+
+    for name in ("native", "tree", "hier", "hier_int8"):
+        comm = Communicator(mesh, CommSpec.from_flag(name), axes=axes)
+        f = jax.jit(comm.wrap(comm.allreduce, in_specs=(spec,),
+                              out_specs=spec))
+        st = ctx.measure(f, x)
+        an = hlo_lib.analyze(f.lower(x).compile().as_text(),
+                             pod_size=pod_size, n_pods=n_pods)
+        yield ctx.row(
+            f"gradex_{name}_{nbytes}B", transport=name, ranks=ranks,
+            size_bytes=nbytes, stats=st,
+            note=f"link={an.get('link_bytes', 0.0) / 2 ** 20:.2f}MiB "
+                 f"dci={an.get('dci_link_bytes', 0.0) / 2 ** 20:.2f}MiB")
+
+
+# -------------------------------------------------------------- stream
+
+
+@register_case("stream", figure="hpcc", ndev=1,
+               description="HPCC STREAM triad local-bandwidth anchor")
+def run_stream(ctx: BenchContext):
+    import jax
+    import jax.numpy as jnp
+
+    @jax.jit
+    def triad(b, c):
+        return b + 3.0 * c
+
+    for n in ctx.profile.stream_sizes:
+        b = jnp.ones((n,), jnp.float32)
+        c = jnp.ones((n,), jnp.float32)
+        st = ctx.measure(triad, b, c)
+        nbytes = 3 * 4 * n
+        yield ctx.row(f"stream_triad_{n}", ranks=1, size_bytes=nbytes,
+                      stats=st, gbps=gbps(nbytes, st["median_us"]))

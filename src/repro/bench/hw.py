@@ -1,0 +1,8 @@
+"""v5e link model constants for the modeled (256..768-rank) extension of
+the paper's sweep — CPU cannot measure those scales.  Bandwidths are the
+single source of truth in :mod:`repro.roofline.analysis`; the latencies
+are the per-hop terms the point-to-point model adds on top."""
+from repro.roofline.analysis import DCI_BW, ICI_BW  # noqa: F401
+
+ICI_LAT = 1e-6     # s per in-pod hop
+DCI_LAT = 10e-6    # s per cross-pod hop

@@ -1,0 +1,175 @@
+"""Declarative benchmark registry: one :class:`BenchCase` per paper
+figure/table, one :class:`Profile` per size/iteration budget.
+
+A case is a generator function ``impl(ctx) -> Iterable[row dict]``
+registered with :func:`register_case`; the runner owns subprocess
+placement (``case.ndev`` virtual devices) and sampling policy (the
+profile's warmup/iters), so case bodies only build jitted callables and
+yield rows via the :class:`BenchContext` helpers.  Registry metadata is
+importable without jax — implementations import jax lazily, inside the
+subprocess that owns the right device count.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Iterable, List, Optional, Tuple
+
+# ---------------------------------------------------------------- profiles
+
+
+@dataclasses.dataclass(frozen=True)
+class Profile:
+    """A size/iteration budget for the whole suite.
+
+    ``full`` is the paper-faithful sweep (Fig 3 reaches 64 MB messages);
+    ``ci`` bounds compile count and message sizes so the suite finishes
+    in CI minutes; ``tiny`` is the test-suite smoke budget — every case
+    must run under it on <= 2 virtual devices.
+    """
+
+    name: str
+    warmup: int
+    iters: int
+    p2p_sizes: Tuple[int, ...]          # bytes (paper Fig 2/3)
+    coll_sizes: Tuple[int, ...]         # per-rank bytes (paper Figs 5/7)
+    coll_ranks: Tuple[int, ...]         # clamped to the live device count
+    stream_sizes: Tuple[int, ...]       # elements (HPCC STREAM triad)
+    gradex_bytes: int                   # gradient buffer, bytes
+    modeled: bool                       # include modeled (v5e-scale) rows
+
+
+PROFILES: Dict[str, Profile] = {
+    "full": Profile("full", warmup=2, iters=5,
+                    p2p_sizes=tuple(16 * 4 ** i for i in range(12)),
+                    coll_sizes=(8, 8 * 1024, 8 * 1024 * 1024),
+                    coll_ranks=(2, 4, 8),
+                    stream_sizes=(1 << 20, 1 << 24),
+                    gradex_bytes=4 * 1024 * 1024, modeled=True),
+    "ci": Profile("ci", warmup=2, iters=7,
+                  p2p_sizes=(16, 1024, 64 * 1024, 1024 * 1024),
+                  coll_sizes=(8, 8 * 1024, 256 * 1024),
+                  coll_ranks=(2, 8),
+                  stream_sizes=(1 << 20,),
+                  gradex_bytes=1024 * 1024, modeled=True),
+    "tiny": Profile("tiny", warmup=1, iters=2,
+                    p2p_sizes=(16, 256),
+                    coll_sizes=(8, 1024),
+                    coll_ranks=(2,),
+                    stream_sizes=(1 << 12,),
+                    gradex_bytes=4096, modeled=True),
+}
+
+
+def get_profile(name: str) -> Profile:
+    try:
+        return PROFILES[name]
+    except KeyError:
+        raise ValueError(f"unknown bench profile {name!r}; "
+                         f"available: {sorted(PROFILES)}") from None
+
+
+# ------------------------------------------------------------------ cases
+
+
+@dataclasses.dataclass(frozen=True)
+class BenchCase:
+    """One paper figure/table: metadata + the row-yielding generator."""
+
+    name: str                           # registry key ("p2p", "agg", ...)
+    figure: str                         # paper anchor ("fig2/3", ...)
+    ndev: int                           # virtual devices the full sweep wants
+    measured: bool                      # False = purely modeled/derived
+    description: str
+    impl: Callable[["BenchContext"], Iterable[dict]]
+
+    def run(self, ctx: "BenchContext") -> List[dict]:
+        return list(self.impl(ctx))
+
+
+_REGISTRY: Dict[str, BenchCase] = {}
+
+
+def register_case(name: str, *, figure: str, ndev: int,
+                  measured: bool = True, description: str = ""):
+    """Decorator: register ``impl(ctx) -> Iterable[row]`` as a case."""
+    def deco(fn):
+        if name in _REGISTRY:
+            raise ValueError(f"bench case {name!r} already registered")
+        _REGISTRY[name] = BenchCase(name=name, figure=figure, ndev=ndev,
+                                    measured=measured,
+                                    description=description or
+                                    (fn.__doc__ or "").strip().split("\n")[0],
+                                    impl=fn)
+        return fn
+    return deco
+
+
+def _ensure_loaded() -> None:
+    # cases self-register on import; keep registry importable without them
+    from repro.bench import cases  # noqa: F401
+
+
+def all_cases() -> Tuple[BenchCase, ...]:
+    _ensure_loaded()
+    return tuple(_REGISTRY[k] for k in sorted(_REGISTRY))
+
+
+def get_case(name: str) -> BenchCase:
+    _ensure_loaded()
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(f"unknown bench case {name!r}; "
+                         f"available: {sorted(_REGISTRY)}") from None
+
+
+# ----------------------------------------------------------------- context
+
+
+@dataclasses.dataclass
+class BenchContext:
+    """What a case body gets: the profile budget, the live device count,
+    and row-construction helpers (so every row carries the same schema)."""
+
+    case: BenchCase
+    profile: Profile
+    ndev: int
+
+    def rank_counts(self) -> Tuple[int, ...]:
+        """Profile rank sweep clamped to the live device count."""
+        return tuple(sorted({min(r, self.ndev)
+                             for r in self.profile.coll_ranks}))
+
+    def measure(self, fn, *args) -> Dict[str, float]:
+        from repro.bench.sampling import sample, stats_us
+        return stats_us(sample(fn, *args, warmup=self.profile.warmup,
+                               iters=self.profile.iters))
+
+    def row(self, name: str, *, ranks: int, size_bytes: int,
+            stats: Dict[str, float], transport: Optional[str] = None,
+            gbps: Optional[float] = None, note: str = "") -> dict:
+        return {
+            "name": name, "case": self.case.name,
+            "figure": self.case.figure, "transport": transport,
+            "ranks": int(ranks), "size_bytes": int(size_bytes),
+            "measured": True,
+            "median_us": float(stats["median_us"]),
+            "p95_us": float(stats["p95_us"]),
+            "min_us": float(stats["min_us"]),
+            "iters": self.profile.iters, "warmup": self.profile.warmup,
+            "gbps": None if gbps is None else float(gbps), "note": note,
+        }
+
+    def model_row(self, name: str, *, us: float, ranks: int,
+                  size_bytes: int, transport: Optional[str] = None,
+                  gbps: Optional[float] = None, note: str = "") -> dict:
+        """A modeled (analytic, not timed) row — v5e-scale extrapolation."""
+        return {
+            "name": name, "case": self.case.name,
+            "figure": self.case.figure, "transport": transport,
+            "ranks": int(ranks), "size_bytes": int(size_bytes),
+            "measured": False,
+            "median_us": float(us), "p95_us": float(us),
+            "min_us": float(us), "iters": 0, "warmup": 0,
+            "gbps": None if gbps is None else float(gbps), "note": note,
+        }

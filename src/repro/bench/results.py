@@ -1,0 +1,130 @@
+"""Schema-versioned benchmark artifacts (``BENCH_<timestamp>.json``).
+
+The JSON document is the durable record CI uploads and the regression
+gate consumes; the legacy ``name,us_per_call,derived`` CSV remains on
+stdout for eyeballing and for the old ``benchmarks/run.py`` consumers.
+``validate`` is deliberately strict — compare.py and the tests both run
+it, so a malformed artifact fails loudly instead of gating on garbage.
+"""
+from __future__ import annotations
+
+import datetime
+import json
+import os
+import subprocess
+from typing import Dict, Iterable, List
+
+SCHEMA = "repro-bench"
+SCHEMA_VERSION = 1
+
+_ROW_FIELDS = {
+    "name": str, "case": str, "figure": str, "ranks": int,
+    "size_bytes": int, "measured": bool, "median_us": (int, float),
+    "p95_us": (int, float), "min_us": (int, float), "iters": int,
+    "warmup": int, "note": str,
+}
+_OPTIONAL_ROW_FIELDS = ("transport", "gbps")  # may be null
+
+
+def git_sha() -> str:
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            cwd=os.path.dirname(os.path.abspath(__file__)), timeout=10)
+        return out.stdout.strip() if out.returncode == 0 else "unknown"
+    except (OSError, subprocess.SubprocessError):
+        return "unknown"
+
+
+def jax_version() -> str:
+    try:
+        from importlib.metadata import version
+        return version("jax")
+    except Exception:  # metadata missing in odd installs — not fatal
+        return "unknown"
+
+
+def new_document(profile: str, rows: List[dict],
+                 device_counts: Dict[str, int]) -> dict:
+    return {
+        "schema": SCHEMA,
+        "schema_version": SCHEMA_VERSION,
+        "created_utc": datetime.datetime.now(
+            datetime.timezone.utc).isoformat(timespec="seconds"),
+        "git_sha": git_sha(),
+        "jax_version": jax_version(),
+        "profile": profile,
+        "device_counts": dict(device_counts),
+        "rows": list(rows),
+    }
+
+
+def validate(doc: dict) -> None:
+    """Raise ValueError on any schema violation."""
+    if not isinstance(doc, dict):
+        raise ValueError("results document must be a JSON object")
+    if doc.get("schema") != SCHEMA:
+        raise ValueError(f"schema must be {SCHEMA!r}, got "
+                         f"{doc.get('schema')!r}")
+    if doc.get("schema_version") != SCHEMA_VERSION:
+        raise ValueError(f"schema_version must be {SCHEMA_VERSION}, got "
+                         f"{doc.get('schema_version')!r}")
+    for key in ("created_utc", "git_sha", "jax_version", "profile"):
+        if not isinstance(doc.get(key), str):
+            raise ValueError(f"missing/non-string top-level field {key!r}")
+    dc = doc.get("device_counts")
+    if not isinstance(dc, dict) or not all(
+            isinstance(k, str) and isinstance(v, int) for k, v in dc.items()):
+        raise ValueError("device_counts must map case name -> int")
+    rows = doc.get("rows")
+    if not isinstance(rows, list) or not rows:
+        raise ValueError("rows must be a non-empty list")
+    seen = set()
+    for i, row in enumerate(rows):
+        if not isinstance(row, dict):
+            raise ValueError(f"rows[{i}] is not an object")
+        for field, typ in _ROW_FIELDS.items():
+            v = row.get(field)
+            ok = isinstance(v, typ)
+            if ok and typ is not bool and isinstance(v, bool):
+                ok = False  # bool satisfies isinstance(.., int); reject it
+            if not ok:
+                raise ValueError(f"rows[{i}] ({row.get('name')!r}): field "
+                                 f"{field!r} must be {typ}, got {v!r}")
+        for field in _OPTIONAL_ROW_FIELDS:
+            v = row.get(field)
+            if v is not None and not isinstance(v, (str, int, float)):
+                raise ValueError(f"rows[{i}]: bad optional field {field!r}")
+        if row["median_us"] < 0 or row["min_us"] < 0:
+            raise ValueError(f"rows[{i}]: negative timing")
+        if not row["min_us"] <= row["median_us"] <= row["p95_us"]:
+            raise ValueError(f"rows[{i}] ({row['name']!r}): "
+                             "min/median/p95 out of order")
+        if row["name"] in seen:
+            raise ValueError(f"duplicate row name {row['name']!r}")
+        seen.add(row["name"])
+
+
+def write(doc: dict, path: str) -> None:
+    validate(doc)
+    with open(path, "w") as fh:
+        json.dump(doc, fh, indent=1, sort_keys=True)
+        fh.write("\n")
+
+
+def load(path: str) -> dict:
+    with open(path) as fh:
+        doc = json.load(fh)
+    validate(doc)
+    return doc
+
+
+def csv_lines(rows: Iterable[dict]) -> Iterable[str]:
+    """The legacy stdout format: ``name,us_per_call,derived``."""
+    yield "name,us_per_call,derived"
+    for r in rows:
+        if r.get("gbps") is not None:
+            derived = f"{r['gbps']:.3f}GB/s"
+        else:
+            derived = r.get("note", "")
+        yield f"{r['name']},{r['median_us']:.1f},{derived}"

@@ -1,0 +1,142 @@
+"""Suite execution.
+
+The parent process never initializes jax devices: each group of cases
+runs in a child ``python -m repro.bench --child`` subprocess launched
+with ``XLA_FLAGS=--xla_force_host_platform_device_count=<ndev>``, and
+streams its rows back as marker-prefixed JSON lines on stdout (anything
+else the child prints passes through untouched).  The roofline summary
+is re-emitted parent-side as derived rows: a *missing* roofline module
+degrades to an ``unavailable`` row, but a *bug* in it propagates — the
+old bare ``except Exception`` in ``benchmarks/run.py`` swallowed real
+errors behind the same message.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+from repro.bench import registry, results
+
+ROW_MARKER = "@@BENCH-ROW@@ "
+
+
+def effective_ndev(case: registry.BenchCase, profile: registry.Profile
+                   ) -> int:
+    """Device count a case runs under: the case's preferred count, capped
+    by the profile's rank budget (tiny runs fit on 2 devices)."""
+    cap = max(max(profile.coll_ranks), 2)
+    return max(1, min(case.ndev, cap))
+
+
+def run_cases_inline(names: Sequence[str], profile: str = "ci"
+                     ) -> List[dict]:
+    """Run cases in *this* process against however many devices exist —
+    the child-side entry, also used directly by tests and the old
+    ``benchmarks/<case>.py`` shims (which set XLA_FLAGS themselves)."""
+    import jax
+
+    prof = registry.get_profile(profile)
+    live = len(jax.devices())
+    rows: List[dict] = []
+    for name in names:
+        case = registry.get_case(name)
+        ctx = registry.BenchContext(case=case, profile=prof,
+                                    ndev=min(case.ndev, live))
+        rows.extend(case.run(ctx))
+    return rows
+
+
+def child_main(names: Sequence[str], profile: str) -> int:
+    """Entry for ``python -m repro.bench --child``: emit one marker line
+    per row; the parent owns aggregation and artifacts."""
+    for row in run_cases_inline(names, profile):
+        print(ROW_MARKER + json.dumps(row), flush=True)
+    return 0
+
+
+def _run_child(ndev: int, names: Sequence[str], profile: str
+               ) -> Tuple[List[dict], int]:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={ndev}"
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    src_root = os.path.dirname(os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__))))
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (src_root, env.get("PYTHONPATH", "")) if p)
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.bench", "--child",
+         "--cases", ",".join(names), "--profile", profile],
+        env=env, capture_output=True, text=True)
+    rows: List[dict] = []
+    for line in proc.stdout.splitlines():
+        if line.startswith(ROW_MARKER):
+            rows.append(json.loads(line[len(ROW_MARKER):]))
+        elif line.strip():
+            print(line, file=sys.stderr)  # pass through child chatter
+    if proc.returncode and proc.stderr:
+        sys.stderr.write(proc.stderr)
+    return rows, proc.returncode
+
+
+def roofline_rows() -> List[dict]:
+    """Derived roofline summary rows (no timing).  ImportError (module
+    genuinely absent in a stripped install) degrades to an 'unavailable'
+    row; any other failure is a bug in repro.roofline and propagates."""
+    try:
+        from repro.roofline import analysis
+    except ImportError as e:
+        return [_derived_row("roofline_summary", f"unavailable:{e}")]
+    rows = [r for c in analysis.load_cells()
+            if (r := analysis.roofline_row(c))]
+    out = []
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        out.append(_derived_row(
+            f"roofline_{r['arch']}_{r['shape']}",
+            f"bound={r['dominant']};frac={r['roofline_fraction']:.4f};"
+            f"useful={r['useful_ratio']:.2f}"))
+    return out
+
+
+def _derived_row(name: str, note: str) -> dict:
+    return {"name": name, "case": "roofline", "figure": "roofline",
+            "transport": None, "ranks": 1, "size_bytes": 0,
+            "measured": False, "median_us": 0.0, "p95_us": 0.0,
+            "min_us": 0.0, "iters": 0, "warmup": 0, "gbps": None,
+            "note": note}
+
+
+def run_suite(names: Optional[Sequence[str]] = None, profile: str = "ci",
+              with_roofline: bool = True
+              ) -> Tuple[dict, List[str]]:
+    """Run the suite in per-device-count subprocesses; returns the
+    results document and the list of failed case groups."""
+    cases = ([registry.get_case(n) for n in names] if names
+             else list(registry.all_cases()))
+    prof = registry.get_profile(profile)
+    groups: Dict[int, List[registry.BenchCase]] = {}
+    for c in cases:
+        groups.setdefault(effective_ndev(c, prof), []).append(c)
+
+    rows: List[dict] = []
+    device_counts: Dict[str, int] = {}
+    failures: List[str] = []
+    for ndev in sorted(groups):
+        group_names = [c.name for c in groups[ndev]]
+        got, rc = _run_child(ndev, group_names, profile)
+        rows.extend(got)
+        for c in groups[ndev]:
+            device_counts[c.name] = ndev
+        if rc:
+            failures.append(f"ndev={ndev}:{','.join(group_names)}")
+    if with_roofline:
+        rows.extend(roofline_rows())
+    doc = results.new_document(profile, rows, device_counts)
+    return doc, failures
+
+
+def print_csv(rows: Iterable[dict]) -> None:
+    for line in results.csv_lines(rows):
+        print(line)

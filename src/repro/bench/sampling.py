@@ -1,0 +1,45 @@
+"""Sample collection: warmup-discarded wall-clock timings of jitted
+calls, summarized as median/p95/min (us).  The old ``time_fn`` median
+in ``benchmarks/common.py`` is a shim over this module."""
+from __future__ import annotations
+
+import math
+import time
+from typing import Callable, Dict, List, Sequence
+
+
+def sample(fn: Callable, *args, warmup: int = 2, iters: int = 5
+           ) -> List[float]:
+    """Wall-clock seconds per call, warmup calls discarded.  Blocks on
+    the result each iteration so async dispatch doesn't hide the work."""
+    import jax
+
+    for _ in range(max(warmup, 0)):
+        jax.block_until_ready(fn(*args))
+    out: List[float] = []
+    for _ in range(max(iters, 1)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        out.append(time.perf_counter() - t0)
+    return out
+
+
+def _quantile(sorted_s: Sequence[float], q: float) -> float:
+    """Nearest-rank quantile of an already-sorted sample."""
+    idx = min(len(sorted_s) - 1, max(0, math.ceil(q * len(sorted_s)) - 1))
+    return sorted_s[idx]
+
+
+def stats_us(samples: Sequence[float]) -> Dict[str, float]:
+    """median/p95/min in microseconds from per-call seconds."""
+    s = sorted(samples)
+    return {
+        "median_us": _quantile(s, 0.5) * 1e6,
+        "p95_us": _quantile(s, 0.95) * 1e6,
+        "min_us": s[0] * 1e6,
+    }
+
+
+def gbps(size_bytes: float, us: float) -> float:
+    """Derived bandwidth for a transfer of ``size_bytes`` in ``us``."""
+    return size_bytes / (max(us, 1e-9) * 1e-6) / 1e9

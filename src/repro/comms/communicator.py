@@ -7,7 +7,7 @@ constructed once from a mesh (hierarchy derived in one place by
 ``Topology.from_mesh``), it exposes
 
   in-shard_map ops   send / recv / sendrecv / barrier / bcast / agg /
-                     allreduce / reduce_scatter / allgather
+                     scatter / allreduce / reduce_scatter / allgather
   jit-level entry    comm.run(fn, *args) / comm.wrap(fn)  — so callers
                      never hand-roll their own ``shard_map``
 
@@ -30,7 +30,8 @@ from repro.comms.transports import Transport, get_transport
 
 Array = jax.Array
 
-_OPS = ("allreduce", "bcast", "agg", "reduce_scatter", "allgather")
+_OPS = ("allreduce", "bcast", "agg", "reduce_scatter", "allgather",
+        "scatter")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -42,6 +43,7 @@ class CommSpec:
     agg: str = "native"
     reduce_scatter: str = "native"
     allgather: str = "native"
+    scatter: str = "native"
 
     @classmethod
     def from_flag(cls, flag: str) -> "CommSpec":
@@ -146,6 +148,13 @@ class Communicator:
         per leaf); zeros elsewhere — pPython's agg()."""
         self._check_rank(root, "root")
         return jax.tree.map(lambda v: self._t["agg"].agg(v, root), x)
+
+    def scatter(self, x: Any, root: int = 0) -> Any:
+        """Inverse of ``agg`` (pPython's root-distributes direction, Fig
+        6): rank ``root``'s flat leaf is split into ``size`` blocks and
+        rank i keeps block i (zero-padded to equal blocks)."""
+        self._check_rank(root, "root")
+        return jax.tree.map(lambda v: self._t["scatter"].scatter(v, root), x)
 
     def reduce_scatter(self, x: Any) -> Any:
         return jax.tree.map(self._t["reduce_scatter"].reduce_scatter, x)

@@ -98,15 +98,27 @@ class Transport(abc.ABC):
         # default: aggregate onto rank 0, then broadcast the full buffer
         return self.bcast(self.agg(x, root=0), root=0)
 
+    def scatter(self, x: Array, root: int = 0) -> Array:
+        """Inverse of agg (paper Fig 6 root-distributes direction):
+        ``root``'s flat buffer is split into n equal blocks and rank i
+        keeps block i (zero-padded; shape (ceil(x.size / n),)).  Default
+        schedule: move the buffer with this transport's bcast, then each
+        rank slices its own block — so 'tree'/'serial' scatters inherit
+        the paper's broadcast schedules."""
+        return self._own_block(self.bcast(x, root).reshape(-1))
+
     def reduce_scatter(self, x: Array) -> Array:
+        return self._own_block(self.allreduce(x).reshape(-1))
+
+    # ------------------------------------------------------------- helpers
+    def _own_block(self, flat: Array) -> Array:
+        """This rank's 1/n block of a replicated flat buffer, zero-padded
+        to n equal blocks of ceil(size / n)."""
         n = self.topo.size()
-        flat = self.allreduce(x).reshape(-1)
         blk = -(-flat.shape[0] // n)
         if flat.shape[0] != n * blk:
             flat = jnp.pad(flat, (0, n * blk - flat.shape[0]))
         return lax.dynamic_slice(flat, (self.topo.rank() * blk,), (blk,))
-
-    # ------------------------------------------------------------- helpers
     def _gather_all_axes(self, flat: Array) -> Array:
         """Concat-gather over every level, innermost axis first, so block
         order matches the C-order linear rank layout."""

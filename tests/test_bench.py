@@ -1,0 +1,194 @@
+"""The bench subsystem: registry round-trip (every case runs at tiny
+sizes on 2 virtual devices), JSON artifact schema validation, and the
+compare.py regression gate on synthetic baselines.  Only the round-trip
+touches jax (in a subprocess); everything else is pure-python."""
+import json
+
+import pytest
+
+from repro.bench import compare, registry, results
+from tests._subproc import run_py
+
+# ------------------------------------------------------ registry round-trip
+
+ROUNDTRIP = """
+import collections, json
+from repro.bench import all_cases, results
+from repro.bench.runner import run_cases_inline
+
+names = [c.name for c in all_cases()]
+rows = run_cases_inline(names, profile="tiny")
+per_case = collections.Counter(r["case"] for r in rows)
+missing = [n for n in names if not per_case[n]]
+assert not missing, f"cases yielded no rows: {missing}"
+assert len({r["name"] for r in rows}) == len(rows), "duplicate row names"
+
+doc = results.new_document("tiny", rows, {n: 2 for n in names})
+results.validate(doc)                       # emitted artifact is schema-valid
+s = json.dumps(doc)
+results.validate(json.loads(s))             # survives a JSON round-trip
+assert any(r["measured"] for r in rows)
+assert any(not r["measured"] for r in rows), "modeled rows missing"
+print("OK", sorted(per_case))
+"""
+
+
+def test_registry_roundtrip_tiny_two_devices():
+    out = run_py(ROUNDTRIP, ndev=2)
+    assert "OK" in out
+    for case in ("p2p", "agg", "bcast", "scatter", "grad_exchange",
+                 "stream"):
+        assert case in out
+
+
+def test_registry_metadata():
+    cases = registry.all_cases()
+    assert {c.name for c in cases} >= {"p2p", "agg", "bcast", "scatter",
+                                       "grad_exchange", "stream"}
+    for c in cases:
+        assert c.ndev >= 1 and c.figure and c.description
+    with pytest.raises(ValueError):
+        registry.get_case("nope")
+    with pytest.raises(ValueError):
+        registry.get_profile("nope")
+    # tiny budget must fit the 2-device test harness
+    tiny = registry.get_profile("tiny")
+    for c in cases:
+        from repro.bench.runner import effective_ndev
+        assert effective_ndev(c, tiny) <= 2
+
+
+# ------------------------------------------------------- schema validation
+
+
+def _row(name, median=100.0, measured=True, **over):
+    r = {"name": name, "case": "p2p", "figure": "fig2/3",
+         "transport": None, "ranks": 2, "size_bytes": 16,
+         "measured": measured, "median_us": float(median),
+         "p95_us": float(median), "min_us": float(median),
+         "iters": 3, "warmup": 1, "gbps": None, "note": ""}
+    r.update(over)
+    return r
+
+
+def _doc(rows, **over):
+    d = {"schema": results.SCHEMA,
+         "schema_version": results.SCHEMA_VERSION,
+         "created_utc": "2026-01-01T00:00:00+00:00", "git_sha": "cafe",
+         "jax_version": "0.0", "profile": "tiny",
+         "device_counts": {"p2p": 2}, "rows": rows}
+    d.update(over)
+    return d
+
+
+def test_validate_accepts_good_and_rejects_bad():
+    results.validate(_doc([_row("a"), _row("b", measured=False)]))
+    bad = [
+        _doc([_row("a")], schema="nope"),
+        _doc([_row("a")], schema_version=99),
+        _doc([]),                                        # empty rows
+        _doc([_row("a"), _row("a")]),                    # duplicate name
+        _doc([_row("a", median_us=-1.0)]),               # negative timing
+        _doc([_row("a", min_us=500.0)]),                 # min > median
+        _doc([_row("a", ranks="two")]),                  # wrong type
+        _doc([_row("a", measured=1)]),                   # int is not bool
+        _doc([_row("a")], device_counts={"p2p": "2"}),
+    ]
+    for doc in bad:
+        with pytest.raises(ValueError):
+            results.validate(doc)
+
+
+def test_write_load_roundtrip(tmp_path):
+    path = tmp_path / "BENCH_t.json"
+    results.write(_doc([_row("a")]), str(path))
+    doc = results.load(str(path))
+    assert doc["rows"][0]["name"] == "a"
+
+
+# -------------------------------------------------------- compare gating
+
+
+def test_compare_pass_on_identical():
+    doc = _doc([_row("a"), _row("b", 5000.0)])
+    rep = compare.compare_docs(doc, doc)
+    assert not rep["regressions"] and not rep["missing"] and not rep["new"]
+
+
+def test_compare_flags_real_slowdown_only():
+    base = _doc([_row("big", 5000.0), _row("small", 10.0),
+                 _row("model", 5000.0, measured=False)])
+    run = _doc([_row("big", 20000.0),        # 4x: regression
+                _row("small", 40.0),         # 4x but under noise floor
+                _row("model", 99999.0, measured=False)])  # modeled: ignored
+    rep = compare.compare_docs(run, base, threshold=1.0,
+                               noise_floor_us=100.0)
+    assert [e["name"] for e in rep["regressions"]] == ["big"]
+    # within-threshold jitter passes
+    rep2 = compare.compare_docs(_doc([_row("big", 7000.0)]),
+                                _doc([_row("big", 5000.0)]),
+                                threshold=1.0, noise_floor_us=100.0)
+    assert not rep2["regressions"]
+    # symmetric speedups show up as improvements, never failures
+    rep3 = compare.compare_docs(_doc([_row("big", 1000.0)]),
+                                _doc([_row("big", 5000.0)]),
+                                threshold=1.0, noise_floor_us=100.0)
+    assert [e["name"] for e in rep3["improvements"]] == ["big"]
+
+
+def test_merge_runs_requires_reproduced_slowdown():
+    base = _doc([_row("a", 1000.0), _row("b", 1000.0)])
+    spiked_a = _doc([_row("a", 20000.0), _row("b", 1000.0)])
+    spiked_b = _doc([_row("a", 1000.0), _row("b", 20000.0)])
+    # one-off stalls on different rows cancel out under best-of merge
+    merged = compare.merge_runs([spiked_a, spiked_b])
+    assert not compare.compare_docs(merged, base)["regressions"]
+    # a slowdown present in every run survives the merge and fails
+    merged2 = compare.merge_runs([spiked_a, spiked_a])
+    rep = compare.compare_docs(merged2, base)
+    assert [e["name"] for e in rep["regressions"]] == ["a"]
+    # union semantics: rows missing from one run come from the other
+    merged3 = compare.merge_runs([_doc([_row("a")]), _doc([_row("c")])])
+    assert [r["name"] for r in merged3["rows"]] == ["a", "c"]
+
+
+def test_compare_missing_and_new_rows_are_soft():
+    base = _doc([_row("a"), _row("gone")])
+    run = _doc([_row("a"), _row("fresh")])
+    rep = compare.compare_docs(run, base)
+    assert rep["missing"] == ["gone"] and rep["new"] == ["fresh"]
+    assert not rep["regressions"]
+
+
+def test_compare_cli_exit_codes(tmp_path):
+    base_p = tmp_path / "base.json"
+    run_p = tmp_path / "run.json"
+    results.write(_doc([_row("a", 5000.0)]), str(base_p))
+    results.write(_doc([_row("a", 5000.0)]), str(run_p))
+    assert compare.main([str(run_p), str(base_p)]) == 0
+
+    results.write(_doc([_row("a", 50000.0)]), str(run_p))
+    assert compare.main([str(run_p), str(base_p)]) == 1
+    assert compare.main([str(run_p), str(base_p), "--warn-only"]) == 0
+    assert compare.main([str(run_p), str(base_p),
+                         "--threshold", "100.0"]) == 0
+
+    results.write(_doc([_row("other")]), str(run_p))
+    assert compare.main([str(run_p), str(base_p)]) == 0
+    assert compare.main([str(run_p), str(base_p),
+                         "--strict-missing"]) == 1
+
+    # malformed artifacts fail loudly, not silently pass the gate
+    (tmp_path / "junk.json").write_text(json.dumps({"schema": "nope"}))
+    with pytest.raises(ValueError):
+        compare.main([str(tmp_path / "junk.json"), str(base_p)])
+
+
+def test_committed_baseline_is_schema_valid():
+    import os
+    path = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "benchmarks", "baseline.json")
+    doc = results.load(path)
+    cases = {r["case"] for r in doc["rows"]}
+    assert {"p2p", "agg", "bcast", "scatter", "grad_exchange",
+            "stream"} <= cases

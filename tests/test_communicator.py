@@ -36,6 +36,12 @@ for root in (0, 3):
     zeros = [i for i in range(8) if i != root]
     assert np.allclose(got[zeros], 0), ("agg zeros", root)
 
+for root in (0, 2):
+    s = go(comm, lambda a, r=root: comm.scatter(a, r))
+    exp = np.zeros(8, np.float32)
+    exp[:5] = np.asarray(v[root])            # 5 elems pad to 8 ranks x 1
+    assert np.allclose(np.asarray(s).reshape(-1), exp), ("scatter", root)
+
 ag = go(comm, lambda a: comm.allgather(a).reshape(1, -1))
 aga = np.asarray(ag).reshape(8, 8, 5)
 assert all(np.allclose(aga[i], np.asarray(v)) for i in range(8)), "allgather"
@@ -112,6 +118,7 @@ def test_commspec_and_registry():
 
     spec = CommSpec.from_flag("hier_int8")
     assert spec.allreduce == "hier_int8"
+    assert spec.scatter == "hier_int8"
     with pytest.raises(ValueError):
         CommSpec.from_flag("auto")
     assert set(TRANSPORTS) <= set(available_transports())
