@@ -36,6 +36,13 @@ class Profile:
     stream_sizes: Tuple[int, ...]       # elements (HPCC STREAM triad)
     gradex_bytes: int                   # gradient buffer, bytes
     modeled: bool                       # include modeled (v5e-scale) rows
+    # served-traffic case (repro/bench/serving.py): request trace shape
+    serve_requests: int = 6             # requests per trace
+    serve_prompt_len: int = 24          # tokens per prompt
+    serve_new_tokens: int = 8           # generated tokens per request
+    serve_slots: int = 3                # engine decode batch
+    serve_max_len: int = 64             # engine cache length
+    serve_rate: float = 200.0           # mean Poisson arrivals per second
 
 
 PROFILES: Dict[str, Profile] = {
@@ -44,19 +51,28 @@ PROFILES: Dict[str, Profile] = {
                     coll_sizes=(8, 8 * 1024, 8 * 1024 * 1024),
                     coll_ranks=(2, 4, 8),
                     stream_sizes=(1 << 20, 1 << 24),
-                    gradex_bytes=4 * 1024 * 1024, modeled=True),
+                    gradex_bytes=4 * 1024 * 1024, modeled=True,
+                    serve_requests=16, serve_prompt_len=48,
+                    serve_new_tokens=16, serve_slots=4,
+                    serve_max_len=128, serve_rate=100.0),
     "ci": Profile("ci", warmup=2, iters=7,
                   p2p_sizes=(16, 1024, 64 * 1024, 1024 * 1024),
                   coll_sizes=(8, 8 * 1024, 256 * 1024),
                   coll_ranks=(2, 8),
                   stream_sizes=(1 << 20,),
-                  gradex_bytes=1024 * 1024, modeled=True),
+                  gradex_bytes=1024 * 1024, modeled=True,
+                  serve_requests=8, serve_prompt_len=32,
+                  serve_new_tokens=8, serve_slots=3,
+                  serve_max_len=64, serve_rate=200.0),
     "tiny": Profile("tiny", warmup=1, iters=2,
                     p2p_sizes=(16, 256),
                     coll_sizes=(8, 1024),
                     coll_ranks=(2,),
                     stream_sizes=(1 << 12,),
-                    gradex_bytes=4096, modeled=True),
+                    gradex_bytes=4096, modeled=True,
+                    serve_requests=3, serve_prompt_len=8,
+                    serve_new_tokens=3, serve_slots=2,
+                    serve_max_len=32, serve_rate=1e6),
 }
 
 
@@ -106,7 +122,7 @@ def register_case(name: str, *, figure: str, ndev: int,
 
 def _ensure_loaded() -> None:
     # cases self-register on import; keep registry importable without them
-    from repro.bench import cases  # noqa: F401
+    from repro.bench import cases, serving  # noqa: F401
 
 
 def all_cases() -> Tuple[BenchCase, ...]:

@@ -1,0 +1,90 @@
+"""Served-traffic benchmark: the serving engine under a deterministic
+Poisson-like arrival trace.
+
+One case, four row families per cache mode (paged and dense):
+
+    serve_ttft_<mode>   p95/median time-to-first-token over the trace's
+                        requests (us); samples = per-request TTFTs,
+                        pooled over the profile's measured repetitions.
+    serve_tok_<mode>    per-generated-token wall time (us/token) per
+                        trace repetition; tokens/sec in the note.
+
+Arrivals are ``rng.exponential(1 / serve_rate)`` inter-arrival gaps
+from a fixed seed — deterministic across runs, Poisson-shaped in
+profile.  The first (warmup) traces compile both dispatch widths, so
+measured rows see steady-state behavior; the compare gate in CI treats
+these rows like any other (threshold + noise floor).
+"""
+from __future__ import annotations
+
+from repro.bench.registry import BenchContext, register_case
+
+ARCH = "gemma3-4b"
+
+
+def _trace(prof, vocab: int):
+    import numpy as np
+
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, vocab, size=prof.serve_prompt_len)
+               for _ in range(prof.serve_requests)]
+    arrivals = np.cumsum(
+        rng.exponential(1.0 / prof.serve_rate, size=prof.serve_requests))
+    return prompts, [float(t) for t in arrivals]
+
+
+def _run_trace(engine, prof, prompts, arrivals, vocab: int):
+    """One full trace; returns (per-request TTFTs s, elapsed s, tokens)."""
+    from repro.serve import Request
+
+    reqs = [Request(rid=i, prompt=p, max_new_tokens=prof.serve_new_tokens)
+            for i, p in enumerate(prompts)]
+    res = engine.run_trace(reqs, arrivals)
+    assert not res.truncated and len(res) == len(reqs)
+    tokens = sum(len(v) for v in res.values())
+    ttfts = [m["ttft_s"] for m in res.metrics.values()
+             if m.get("ttft_s") is not None]
+    elapsed = max(m["done_s"] for m in res.metrics.values()) - min(arrivals)
+    return ttfts, elapsed, tokens
+
+
+@register_case("serving", figure="serve", ndev=1,
+               description="served-traffic tokens/sec and p95 TTFT, "
+                           "paged vs dense KV cache, Poisson arrivals")
+def run_serving(ctx: BenchContext):
+    import jax
+    from repro.bench.sampling import stats_us
+    from repro.configs.base import get_config, reduced
+    from repro.launch.mesh import mesh_for_devices
+    from repro.models.model import Model
+    from repro.serve import Engine
+
+    prof = ctx.profile
+    cfg = reduced(get_config(ARCH))
+    mesh = mesh_for_devices(1)
+    params = Model(cfg, mesh).init(jax.random.PRNGKey(0))
+    prompts, arrivals = _trace(prof, cfg.vocab_size)
+
+    for mode in ("paged", "dense"):
+        engine = Engine(cfg, mesh, slots=prof.serve_slots,
+                        max_len=prof.serve_max_len, cache_mode=mode)
+        engine.load(params)
+        for _ in range(max(prof.warmup, 1)):   # compile both tick widths
+            _run_trace(engine, prof, prompts, arrivals, cfg.vocab_size)
+        ttfts, per_tok, total = [], [], 0
+        for _ in range(max(prof.iters, 1)):
+            t, elapsed, n = _run_trace(engine, prof, prompts, arrivals,
+                                       cfg.vocab_size)
+            ttfts.extend(t)
+            per_tok.append(elapsed / max(n, 1))
+            total = n
+        tok_s = 1.0 / (sorted(per_tok)[len(per_tok) // 2])
+        yield ctx.row(f"serve_ttft_{mode}", ranks=1,
+                      size_bytes=prof.serve_prompt_len,
+                      stats=stats_us(ttfts),
+                      note=f"requests={prof.serve_requests} "
+                           f"slots={prof.serve_slots}")
+        yield ctx.row(f"serve_tok_{mode}", ranks=1, size_bytes=total,
+                      stats=stats_us(per_tok),
+                      note=f"tok_s={tok_s:.0f} "
+                           f"new={prof.serve_new_tokens}")

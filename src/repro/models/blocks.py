@@ -84,28 +84,49 @@ def self_attention(p, x, pos, kv, *, heads, kv_heads, dh, window, theta,
                    mode, q_chunk, logits_dtype=jnp.float32
                    ) -> Tuple[Array, Optional[dict]]:
     """x: (B, C, D); pos: (B, C); kv: {'k','v'} (B,W,...) + group-level pos
-    handled by the caller (passed as kv['pos'])."""
+    handled by the caller (passed as kv['pos']).  A paged entry carries a
+    block table in kv['btab'] and its k/v are the shared physical pool
+    (num_blocks, bs, H, dh) instead of per-slot rings — same update
+    discipline, reads/writes go through the table."""
     xn = rmsnorm(p["norm"], x)
     q, k, v = _qkv(p, xn, xn, heads, kv_heads, dh)
     q = rope(q, pos, theta)
     k = rope(k, pos, theta)
     new_kv = None
+    paged = kv is not None and "btab" in kv
     if mode == "train":
         out = attention(q, k, v, pos, pos, window=window, causal=True,
                         q_chunk=q_chunk, logits_dtype=logits_dtype)
     elif mode == "chunk":
-        keys = jnp.concatenate([kv["k"], k], axis=1)
-        vals = jnp.concatenate([kv["v"], v], axis=1)
+        old_k = cache_lib.paged_gather(kv["k"], kv["btab"]) if paged \
+            else kv["k"]
+        old_v = cache_lib.paged_gather(kv["v"], kv["btab"]) if paged \
+            else kv["v"]
+        keys = jnp.concatenate([old_k, k], axis=1)
+        vals = jnp.concatenate([old_v, v], axis=1)
         k_pos = jnp.concatenate([kv["pos"], pos], axis=1)
         out = attention(q, keys, vals, pos, k_pos, window=window,
                         causal=True, q_chunk=q_chunk,
                         logits_dtype=logits_dtype)
-        k2, v2, _ = cache_lib.update_kv(kv["k"], kv["v"], kv["pos"], k, v, pos)
+        if paged:
+            k2 = cache_lib.paged_scatter(kv["k"], kv["btab"], k, pos)
+            v2 = cache_lib.paged_scatter(kv["v"], kv["btab"], v, pos)
+        else:
+            k2, v2, _ = cache_lib.update_kv(kv["k"], kv["v"], kv["pos"],
+                                            k, v, pos)
         new_kv = {"k": k2, "v": v2}
     else:  # decode: update-then-attend
-        k2, v2, pos2 = cache_lib.update_kv(kv["k"], kv["v"], kv["pos"],
-                                           k, v, pos)
-        out = attention(q, k2, v2, pos, pos2, window=window, causal=True)
+        pos2 = cache_lib.scatter_ring(kv["pos"], pos, pos)
+        if paged:
+            k2 = cache_lib.paged_scatter(kv["k"], kv["btab"], k, pos)
+            v2 = cache_lib.paged_scatter(kv["v"], kv["btab"], v, pos)
+            gk = cache_lib.paged_gather(k2, kv["btab"])
+            gv = cache_lib.paged_gather(v2, kv["btab"])
+        else:
+            k2 = cache_lib.scatter_ring(kv["k"], k, pos)
+            v2 = cache_lib.scatter_ring(kv["v"], v, pos)
+            gk, gv = k2, v2
+        out = attention(q, gk, gv, pos, pos2, window=window, causal=True)
         new_kv = {"k": k2, "v": v2}
     B, C = x.shape[:2]
     return out.reshape(B, C, heads * dh) @ p["wo"], new_kv

@@ -1,30 +1,61 @@
 """KV / recurrent-state cache machinery.
 
 A *cache entry* serves one stack of ``count`` identical layers (the scan
-group).  KV entries are ring buffers of length ``cache_len`` =
-min(max_len, window): sliding-window layers keep only their window, global
-layers the full sequence.  Slot positions are tracked explicitly in
-``pos`` (shape (B, cache_len), -1 = empty) so attention masks are always
-derived from true token positions — this makes ring wraparound, chunked
-prefill and per-sequence decode offsets all fall out of one code path.
+group).  KV entries come in two storage layouts:
+
+* **ring** — a per-slot buffer of length ``cache_len`` = min(max_len,
+  window): sliding-window layers keep only their window, global layers
+  the full sequence.
+* **paged** — a *shared* physical pool of fixed-size blocks
+  ((count, num_blocks, block_size, ...)) plus a per-slot block table
+  ``btab`` (B, max_blocks) mapping logical block -> physical block (-1 =
+  unleased).  Slots lease blocks on demand (see repro/serve/pool.py)
+  instead of reserving ``max_len`` rings up front; the attention path
+  gathers/scatters through the table.  Used for full-length entries
+  where the dense reservation is the memory cost worth paging.
+
+Slot positions are tracked explicitly in ``pos`` (shape (B, L), -1 =
+empty) so attention masks are always derived from true token positions —
+ring wraparound, chunked prefill, paging and per-sequence decode offsets
+all fall out of one code path.
+
+Writes are masked per-token scatters (``scatter_ring``): tokens with
+``q_pos < 0`` are dropped entirely, which lets a serving batch mix
+prefill chunks, single decode tokens and idle slots in one dispatch
+without clobbering live cache lines.
 
 Update discipline (see repro/models/blocks.py):
   * chunk extend (C > 1): attend over [old cache ++ chunk], then write the
-    chunk into the ring ("attend-then-update" — never clobbers keys the
-    chunk still needs);
-  * decode (C == 1): write first, then attend over the ring only
+    chunk ("attend-then-update" — never clobbers keys the chunk still
+    needs);
+  * decode (C == 1): write first, then attend over the cache only
     ("update-then-attend" — avoids a full cache copy per token; safe
     because the overwritten slot is exactly window positions old).
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax import lax
 
 Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class PageSpec:
+    """Paged-pool geometry: ``num_blocks`` physical blocks of
+    ``block_size`` tokens shared by all slots of an entry."""
+
+    block_size: int
+    num_blocks: int
+
+    def logical_blocks(self, max_len: int) -> int:
+        return -(-max_len // self.block_size)        # ceil
+
+    def logical_len(self, max_len: int) -> int:
+        return self.logical_blocks(max_len) * self.block_size
 
 
 def kv_entry(count: int, batch: int, cache_len: int, kv_heads: int,
@@ -45,18 +76,29 @@ def kv_entry_specs(count, batch, cache_len, kv_heads, head_dim,
     }
 
 
-def _write_ring(buf: Array, new: Array, start: Array) -> Array:
-    """Write ``new`` (B, C, ...) into ring ``buf`` (B, W, ...) at per-batch
-    slot ``start`` (B,) int32.  Requires C == W, or C | W (no wraparound)."""
-    B, W = buf.shape[0], buf.shape[1]
-    C = new.shape[1]
-    if C >= W:
-        return lax.dynamic_update_slice_in_dim(buf, new[:, -W:], 0, axis=1)
+def ring_indices(q_pos: Array, W: int) -> Array:
+    """Per-token ring write index for chunk positions ``q_pos`` (B, C):
+    ``p % W`` for tokens that survive (valid and within the chunk's last
+    ``W`` positions — older ones would be overwritten by the same chunk),
+    ``W`` (out of range => dropped by ``mode='drop'``) otherwise."""
+    valid = q_pos >= 0
+    last = jnp.max(jnp.where(valid, q_pos, -1), axis=1, keepdims=True)
+    keep = valid & (q_pos > last - W)
+    return jnp.where(keep, q_pos % W, W)
 
-    def upd(b, n, s):
-        return lax.dynamic_update_slice_in_dim(b, n, s, axis=0)
 
-    return jax.vmap(upd)(buf, new, start)
+def scatter_ring(buf: Array, new: Array, q_pos: Array) -> Array:
+    """Masked per-token scatter of ``new`` (B, C, ...) into ring ``buf``
+    (B, W, ...): token at absolute position p lands at slot ``p % W``;
+    tokens with ``q_pos < 0`` (padding / idle slots) are dropped.  Unlike
+    a contiguous dynamic-update-slice this is safe for ragged serving
+    batches where only some batch rows carry real tokens."""
+    idx = ring_indices(q_pos, buf.shape[1])
+
+    def scat(b, i, n):
+        return b.at[i].set(n, mode="drop")
+
+    return jax.vmap(scat)(buf, idx, new)
 
 
 def update_kv(entry_k: Array, entry_v: Array, pos: Array,
@@ -65,15 +107,74 @@ def update_kv(entry_k: Array, entry_v: Array, pos: Array,
     """Write a chunk into one layer's ring.
 
     entry_k/v: (B, W, H, dh); pos: (B, W); new_k/v: (B, C, H, dh);
-    q_pos: (B, C) absolute positions of the chunk tokens.
+    q_pos: (B, C) absolute positions of the chunk tokens (-1 = padding,
+    dropped).
     """
-    W = entry_k.shape[1]
-    C = new_k.shape[1]
-    start = q_pos[:, 0] % W if C < W else q_pos[:, 0] * 0
-    k2 = _write_ring(entry_k, new_k, start)
-    v2 = _write_ring(entry_v, new_v, start)
-    pos2 = _write_ring(pos, q_pos[:, -W:] if C >= W else q_pos, start)
+    k2 = scatter_ring(entry_k, new_k, q_pos)
+    v2 = scatter_ring(entry_v, new_v, q_pos)
+    pos2 = scatter_ring(pos, q_pos, q_pos)
     return k2, v2, pos2
+
+
+# --- paged entries ---------------------------------------------------------
+
+
+def _flat_pool(buf: Array) -> Array:
+    """(num_blocks, bs, ...) physical pool -> (num_blocks * bs, ...)."""
+    return buf.reshape((buf.shape[0] * buf.shape[1],) + buf.shape[2:])
+
+
+def paged_gather(buf: Array, btab: Array) -> Array:
+    """Materialize the logical per-slot view of a paged pool.
+
+    buf: (num_blocks, bs, H, dh) one layer's physical pool;
+    btab: (B, M) block table.  Returns (B, M * bs, H, dh) where logical
+    token position p of slot b lives at index p; unleased blocks read as
+    zeros (their ``pos`` entries are -1, so attention masks them out).
+    """
+    bs = buf.shape[1]
+    flat = _flat_pool(buf)
+    base = jnp.where(btab >= 0, btab * bs, flat.shape[0])     # OOB => fill
+    idx = base[:, :, None] + jnp.arange(bs, dtype=btab.dtype)[None, None]
+    idx = idx.reshape(btab.shape[0], -1)
+    return jnp.take(flat, idx, axis=0, mode="fill", fill_value=0)
+
+
+def paged_scatter(buf: Array, btab: Array, new: Array, q_pos: Array
+                  ) -> Array:
+    """Write chunk tokens into the physical pool through the block table.
+
+    buf: (num_blocks, bs, H, dh); btab: (B, M); new: (B, C, H, dh);
+    q_pos: (B, C) logical positions (-1 = padding).  Tokens whose
+    position is invalid or whose logical block is unleased are dropped —
+    they can never land in another slot's blocks.
+    """
+    bs = buf.shape[1]
+    flat = _flat_pool(buf)
+    size = flat.shape[0]
+    lb = jnp.where(q_pos >= 0, q_pos // bs, 0)
+    blk = jnp.take_along_axis(btab, lb, axis=1)               # (B, C)
+    phys = jnp.where((q_pos >= 0) & (blk >= 0),
+                     blk * bs + q_pos % bs, size)             # size => drop
+    flat = flat.at[phys.reshape(-1)].set(
+        new.reshape((-1,) + new.shape[2:]), mode="drop")
+    return flat.reshape(buf.shape)
+
+
+def paged_kv_entry(count: int, num_blocks: int, block_size: int,
+                   batch: int, max_len: int, kv_heads: int, head_dim: int,
+                   dtype=jnp.bfloat16) -> Dict[str, Array]:
+    """A paged KV entry: shared physical pool + per-slot block table."""
+    M = -(-max_len // block_size)
+    L = M * block_size
+    return {
+        "k": jnp.zeros((count, num_blocks, block_size, kv_heads, head_dim),
+                       dtype),
+        "v": jnp.zeros((count, num_blocks, block_size, kv_heads, head_dim),
+                       dtype),
+        "pos": jnp.full((batch, L), -1, jnp.int32),
+        "btab": jnp.full((batch, M), -1, jnp.int32),
+    }
 
 
 def cache_len_for(window: int, max_len: int) -> int:

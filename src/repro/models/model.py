@@ -7,6 +7,7 @@ stays O(1) in depth — essential for the 512-device dry-run sweep.
 
 Public surface:
     Model(cfg, mesh)   .init  .train_loss  .prefill  .decode_step
+                       .serve_step  .reset_cache_slots
                        .cache_specs  .param_specs (see partition.py)
 """
 from __future__ import annotations
@@ -215,7 +216,9 @@ class Model:
 
     # --- caches ---------------------------------------------------------------
     def _entry_shape(self, g: GroupDef, s: SubBlockDef, batch: int,
-                     max_len: int) -> Dict[str, Tuple]:
+                     max_len: int,
+                     paged: Optional[cache_lib.PageSpec] = None
+                     ) -> Dict[str, Tuple]:
         cfg = self.cfg
         if s.kind == MLSTM:
             return {"C": ((g.count, batch, cfg.num_heads, cfg.head_dim,
@@ -230,10 +233,21 @@ class Model:
         if s.kind in (ATTN, HYMBA):
             wl = max_len if s.use_window_array else \
                 cache_lib.cache_len_for(s.window, max_len)
-            out["k"] = ((g.count, batch, wl, cfg.num_kv_heads, cfg.head_dim),
-                        jnp.bfloat16)
-            out["v"] = out["k"]
-            out["pos"] = ((batch, wl), jnp.int32)
+            if paged is not None and wl >= max_len:
+                # page exactly the entries whose dense form reserves the
+                # full max_len; windowed rings are already proportional
+                out["k"] = ((g.count, paged.num_blocks, paged.block_size,
+                             cfg.num_kv_heads, cfg.head_dim), jnp.bfloat16)
+                out["v"] = out["k"]
+                out["pos"] = ((batch, paged.logical_len(max_len)),
+                              jnp.int32)
+                out["btab"] = ((batch, paged.logical_blocks(max_len)),
+                               jnp.int32)
+            else:
+                out["k"] = ((g.count, batch, wl, cfg.num_kv_heads,
+                             cfg.head_dim), jnp.bfloat16)
+                out["v"] = out["k"]
+                out["pos"] = ((batch, wl), jnp.int32)
         if s.kind == XATTN:
             n = cfg.num_image_tokens or cfg.src_seq_len
             out["k"] = ((g.count, batch, n, cfg.num_kv_heads, cfg.head_dim),
@@ -245,23 +259,25 @@ class Model:
             out["conv"] = ((g.count, batch, 3, cfg.ssm_d_inner), jnp.float32)
         return out
 
-    def cache_specs(self, batch: int, max_len: int):
+    def cache_specs(self, batch: int, max_len: int,
+                    paged: Optional[cache_lib.PageSpec] = None):
         specs = {}
         for g in self.dec_groups:
             for si, s in enumerate(g.subs):
-                ent = self._entry_shape(g, s, batch, max_len)
+                ent = self._entry_shape(g, s, batch, max_len, paged)
                 specs[f"{g.name}_{si}"] = {
                     k: jax.ShapeDtypeStruct(sh, dt)
                     for k, (sh, dt) in ent.items()}
         return specs
 
-    def init_cache(self, batch: int, max_len: int):
+    def init_cache(self, batch: int, max_len: int,
+                   paged: Optional[cache_lib.PageSpec] = None):
         def mk(sds):
             if sds.dtype == jnp.int32:
                 return jnp.full(sds.shape, -1, jnp.int32)
             init = -jnp.inf if False else 0.0
             return jnp.zeros(sds.shape, sds.dtype)
-        specs = self.cache_specs(batch, max_len)
+        specs = self.cache_specs(batch, max_len, paged)
         out = jax.tree.map(mk, specs)
         # m-states start at -inf
         for name, ent in out.items():
@@ -338,6 +354,8 @@ class Model:
         kv = None
         if mode != "train":
             kv = {"k": entry["k"], "v": entry["v"], "pos": entry["pos"]}
+            if "btab" in entry:
+                kv["btab"] = entry["btab"]
         o, new_kv = blocks.self_attention(
             p, h, pos, kv, window=window, theta=s.theta, mode=mode,
             q_chunk=self.q_chunk, logits_dtype=self.logits_dtype, **dims)
@@ -365,16 +383,21 @@ class Model:
         threaded in).  Returns (h, new entries, aux)."""
         cfg = self.cfg
         train = mode == "train"
-        # per-layer xs: params + scanned cache leaves + window array
+        # per-layer xs: params + scanned cache leaves + window array.
+        # 'pos' and 'btab' are group-level (identical for every layer in
+        # the scan) and threaded around it, not through it.
         cache_xs = ()
         if not train:
             cache_xs = tuple(
-                {k: v for k, v in entries[si].items() if k != "pos"}
+                {k: v for k, v in entries[si].items()
+                 if k not in ("pos", "btab")}
                 for si in range(len(g.subs)))
         warr = jnp.asarray(g.window_array, jnp.int32) if g.window_array \
             else None
         pos_by_sub = [entries[si].get("pos") if not train else None
                       for si in range(len(g.subs))]
+        btab_by_sub = [entries[si].get("btab") if not train else None
+                       for si in range(len(g.subs))]
 
         def body(carry, xs):
             h, aux = carry
@@ -398,12 +421,14 @@ class Model:
                     entry = dict(cs[si])
                     if pos_by_sub[si] is not None:
                         entry["pos"] = pos_by_sub[si]
+                    if btab_by_sub[si] is not None:
+                        entry["btab"] = btab_by_sub[si]
                 h, new, a = self._apply_sub(s, ps[si], h, entry, pos, ctx,
                                             mode, window_override=wv)
                 aux = aux + a
                 if not train:
                     new_cs.append({k: v for k, v in (new or {}).items()
-                                   if k != "pos"})
+                                   if k not in ("pos", "btab")})
             return (h, aux), tuple(new_cs)
 
         if cfg.remat:
@@ -422,12 +447,12 @@ class Model:
             for si, s in enumerate(g.subs):
                 ent = dict(new_cache_xs[si])
                 if pos_by_sub[si] is not None:
-                    # group-level position ring update (same for all layers)
-                    W = pos_by_sub[si].shape[-1]
-                    C = pos.shape[-1]
-                    start = pos[:, 0] % W if C < W else pos[:, 0] * 0
-                    ent["pos"] = cache_lib._write_ring(
-                        pos_by_sub[si], pos[:, -W:] if C >= W else pos, start)
+                    # group-level position update (same for all layers);
+                    # masked scatter drops padded (-1) positions
+                    ent["pos"] = cache_lib.scatter_ring(
+                        pos_by_sub[si], pos, pos)
+                if btab_by_sub[si] is not None:
+                    ent["btab"] = btab_by_sub[si]   # host-leased, read-only
                 new_entries[si] = ent
         return h, new_entries, aux
 
@@ -521,3 +546,49 @@ class Model:
 
     def decode_step(self, params, tokens, positions, cache):
         return self.extend(params, tokens, positions, cache, {})
+
+    def serve_step(self, params, tokens, starts, lengths, cache):
+        """One serving dispatch over a ragged batch.
+
+        tokens: (B, C); starts: (B,) absolute position of each slot's
+        first token; lengths: (B,) valid token count per slot (0 = idle
+        slot).  Positions past ``lengths`` are masked to -1, so their
+        tokens neither attend nor write to the cache.  Returns (logits
+        (B, 1, V) at each slot's last valid token, new cache); idle
+        slots' logits are garbage and must be ignored by the caller.
+        """
+        B, C = tokens.shape
+        h = jnp.take(params["emb"], tokens, axis=0)
+        off = jnp.arange(C, dtype=jnp.int32)[None]
+        pos = jnp.where(off < lengths[:, None], starts[:, None] + off, -1)
+        mode = "decode" if C == 1 else "chunk"
+        h, new_cache, _ = self._backbone(params, h, pos, cache,
+                                         {"media": None}, mode)
+        last = jnp.clip(lengths - 1, 0, C - 1)
+        hl = jnp.take_along_axis(
+            h, last[:, None, None].astype(jnp.int32), axis=1)
+        return logits_for(hl, self._unemb(params)), new_cache
+
+    def reset_cache_slots(self, cache, mask):
+        """Clear per-slot cache state where ``mask`` (B,) is True so the
+        slot can be reused.  pos/btab go to -1; xLSTM stabilizer states
+        ('m') to -inf; paged physical pools pass through untouched (their
+        blocks are recycled through the host-side pool and overwritten on
+        the next lease); everything else is zeroed.  Batch is axis 0 for
+        pos/btab and axis 1 (after the layer-count axis) for the rest."""
+        def reset_entry(ent):
+            paged = "btab" in ent
+            out = {}
+            for k, v in ent.items():
+                if k in ("pos", "btab"):
+                    out[k] = jnp.where(mask[:, None],
+                                       jnp.full_like(v, -1), v)
+                elif paged and k in ("k", "v"):
+                    out[k] = v
+                else:
+                    m = mask.reshape((1, -1) + (1,) * (v.ndim - 2))
+                    fill = jnp.full_like(v, -jnp.inf) if k == "m" \
+                        else jnp.zeros_like(v)
+                    out[k] = jnp.where(m, fill, v)
+            return out
+        return {name: reset_entry(ent) for name, ent in cache.items()}

@@ -1,0 +1,8 @@
+"""Production serving subsystem: paged KV cache, continuous batching,
+async engine loop.  See repro/serve/README.md."""
+from repro.serve.engine import Engine, Request, ServeResult
+from repro.serve.pool import BlockPool, PoolExhausted
+from repro.serve.scheduler import Scheduler, agree_admission_count
+
+__all__ = ["Engine", "Request", "ServeResult", "BlockPool",
+           "PoolExhausted", "Scheduler", "agree_admission_count"]

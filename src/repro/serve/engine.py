@@ -1,25 +1,47 @@
-"""Serving engine: chunked prefill + batched decode with slot management.
+"""Serving engine: paged KV cache + continuous batching + async overlap.
 
-A light continuous-batching engine over the Model API:
-  * fixed number of ``slots`` (the decode batch);
-  * requests are admitted into free slots; prefill runs chunked (bounded
-    activation footprint — the same ``extend`` path the dry-run lowers);
-  * one jit'd decode step advances every active slot by a token;
-  * per-slot positions mean requests of different lengths coexist (the
-    cache machinery masks by true token positions);
-  * greedy or temperature sampling with an explicit PRNG key.
+The engine glues three pieces (see repro/serve/README.md):
 
-The multi-host production layout shards slots over the batch axes and
-the KV cache per partition.py; this engine is what examples/serve_lm.py
-and the decode benchmarks drive.  Host-side admission control is
-per-process, so cross-host agreement points (weights loaded, drain)
-go through the mesh-bound ``Communicator`` barrier rather than ad-hoc
-blocking on arrays.
+* :class:`~repro.serve.pool.BlockPool` — host-side lease accounting for
+  the paged KV cache (``cache_mode="paged"``, the default for
+  attention-only architectures): slots lease fixed-size blocks on
+  demand instead of reserving ``slots * max_len`` dense rings.
+* :class:`~repro.serve.scheduler.Scheduler` — continuous batching:
+  requests are admitted into free slots *between* ticks, and each tick
+  is one jitted dispatch (``Model.serve_step`` + in-jit batched
+  sampling, cache buffers donated) in which every row independently
+  carries a prefill chunk, a decode token, or nothing.
+* an async loop — dispatches tick t+1 before processing tick t's
+  sampled tokens, so host-side bookkeeping overlaps device work.
+  Decode ticks read their input token from a device-resident
+  next-token buffer (updated inside the previous dispatch), so no
+  host round-trip sits on the critical path.  Length-based completion
+  is host-predictable; EOS detection lags one tick — the speculative
+  extra token is discarded (epoch-guarded) and the slot released.
+
+Cache modes:
+
+* ``paged``  — batched direct-write prefill + paged full-length
+  entries.  Requires an attention-only architecture (no MoE, no
+  recurrent state, no cross-attention): padded rows in a shared
+  dispatch are provably inert only for the masked-scatter KV path.
+* ``dense``  — same batched path over dense rings (the equivalence
+  reference for paged, and the right choice when ``max_len`` is small).
+* ``legacy`` — isolated batch=1 chunked prefill scattered into the
+  slot (the pre-paged path), batched decode.  Automatically selected
+  for MoE / recurrent / encoder-decoder architectures, where padded
+  prefill rows would corrupt per-slot recurrent state or couple slots
+  through expert capacity.
+
+Cross-host: admission goes through a Communicator agg+bcast agreement
+round (:func:`~repro.serve.scheduler.agree_admission_count`); load and
+drain are Communicator barriers.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+import time
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -28,7 +50,12 @@ from jax.sharding import Mesh
 
 from repro.comms import Communicator
 from repro.configs.base import ArchConfig
+from repro.models import cache as cache_lib
 from repro.models.model import Model
+from repro.serve.pool import BlockPool
+from repro.serve.scheduler import Scheduler, TickPlan, agree_admission_count
+
+_LOAD_MSG = "Engine.load() must be called before admission"
 
 
 @dataclasses.dataclass
@@ -37,117 +64,377 @@ class Request:
     prompt: np.ndarray            # (prompt_len,) int32
     max_new_tokens: int = 16
     temperature: float = 0.0
+    eos_id: Optional[int] = None  # stop token (detected one tick late)
     out_tokens: Optional[List[int]] = None
+
+
+class ServeResult(dict):
+    """``{rid: [tokens]}`` for completed requests, plus:
+
+    * ``truncated`` — True when ``max_steps`` hit before the queue
+      drained (the old engine silently dropped this);
+    * ``unfinished`` — ``{rid: partial tokens}`` for in-flight and
+      never-admitted requests at truncation;
+    * ``metrics`` — ``{rid: {arrival_s, ttft_s, done_s, tokens}}``
+      (host-observed; TTFT includes the one-tick pipeline lag).
+    """
+
+    def __init__(self, done, truncated: bool, unfinished, metrics):
+        super().__init__(done)
+        self.truncated = truncated
+        self.unfinished = dict(unfinished)
+        self.metrics = dict(metrics)
+
+
+def _supports_batched(cfg: ArchConfig) -> bool:
+    """Archs whose padded rows are inert in a shared prefill dispatch."""
+    return not (cfg.num_experts or cfg.xlstm_pattern
+                or cfg.family == "hybrid" or cfg.encoder_layers
+                or cfg.xattn_every)
 
 
 class Engine:
     def __init__(self, cfg: ArchConfig, mesh: Mesh, slots: int,
-                 max_len: int, seed: int = 0):
+                 max_len: int, seed: int = 0, cache_mode: str = "auto",
+                 block_size: int = 16, num_blocks: Optional[int] = None,
+                 policy: str = "conservative", overlap: bool = True):
         self.cfg = cfg
         self.model = Model(cfg, mesh)
         self.comm = Communicator.for_mesh(mesh)
         self.slots = slots
         self.max_len = max_len
-        self.params = None
         self.key = jax.random.PRNGKey(seed)
-        self._decode = jax.jit(self.model.decode_step)
-        self._extend = jax.jit(self.model.extend, static_argnames=())
+        self.overlap = overlap
+        batched_ok = _supports_batched(cfg)
+        if cache_mode == "auto":
+            cache_mode = "paged" if batched_ok else "legacy"
+        if cache_mode in ("paged", "dense") and not batched_ok:
+            raise ValueError(
+                f"cache_mode={cache_mode!r} needs the batched prefill "
+                f"path, unavailable for arch {cfg.name!r} (recurrent/"
+                f"MoE/enc-dec); use cache_mode='legacy'")
+        if cache_mode not in ("paged", "dense", "legacy"):
+            raise ValueError(f"unknown cache_mode {cache_mode!r}")
+        self.cache_mode = cache_mode
+        self.block_size = block_size
+        m_blocks = -(-max_len // block_size)
+        self.num_blocks = slots * m_blocks if num_blocks is None \
+            else num_blocks
+        self.sched = Scheduler(slots, cfg.prefill_chunk, policy)
+        self.pool: Optional[BlockPool] = None
+        self.params = None
         self.cache = None
-        self.positions = np.zeros((slots,), np.int32)
-        self.active = np.zeros((slots,), bool)
+        self.next_buf = None
+        self.temps = np.zeros((slots,), np.float32)
         self.requests: Dict[int, Request] = {}
-        self.slot_of: Dict[int, int] = {}
+        self._done: Dict[int, List[int]] = {}
+        self._metrics: Dict[int, dict] = {}
+        self._arrival: Dict[int, float] = {}
+        self._reset_mask = np.zeros((slots,), bool)
+        donate = jax.default_backend() != "cpu"
+        self._dispatch_fn = jax.jit(
+            self._dispatch_body, donate_argnums=(7, 8) if donate else ())
+        self._reset_fn = jax.jit(
+            self.model.reset_cache_slots,
+            donate_argnums=(0,) if donate else ())
+        self._extend = jax.jit(self.model.extend)
+        self._scatter = jax.jit(self._scatter_body)
+        self._sample1 = jax.jit(self._sample1_body)
 
+    # ------------------------------------------------------------------ load
     def load(self, params) -> None:
         self.params = params
-        self.cache = self.model.init_cache(self.slots, self.max_len)
+        if self.cache_mode == "paged":
+            spec = cache_lib.PageSpec(self.block_size, self.num_blocks)
+            self.cache = self.model.init_cache(self.slots, self.max_len,
+                                               paged=spec)
+            self.pool = BlockPool(self.num_blocks, self.block_size,
+                                  self.slots, self.max_len)
+        else:
+            self.cache = self.model.init_cache(self.slots, self.max_len)
+            self.pool = None
+        self.next_buf = jnp.zeros((self.slots,), jnp.int32)
         # every rank must hold weights + cache before admission starts
         self.comm.sync()
 
-    # ------------------------------------------------------------- admit
-    def _scatter_slot(self, big, one, slot: int):
-        """Write a batch=1 cache into batch slot ``slot`` of the engine
-        cache.  'pos' leaves carry batch at dim 0, tensor leaves at dim 1."""
-        def put(b, o):
-            if b.ndim == o.ndim and o.shape[0] == 1 and b.shape[0] == self.slots:
-                return b.at[slot].set(o[0])            # pos: (B, W)
-            return b.at[:, slot].set(o[:, 0])          # (count, B, ...)
-        return jax.tree.map(put, big, one)
+    # ----------------------------------------------------------- jit bodies
+    def _dispatch_body(self, params, tokens, use_next, starts, lengths,
+                      temps, key, next_buf, cache):
+        """One tick: serve_step + batched sampling, all in one dispatch.
+        Rows with ``use_next`` read their (single) token from the device
+        next-token buffer; idle rows (length 0) touch nothing."""
+        first = jnp.arange(tokens.shape[1], dtype=jnp.int32)[None] == 0
+        tok = jnp.where(use_next[:, None] & first, next_buf[:, None],
+                        tokens)
+        logits, cache = self.model.serve_step(params, tok, starts,
+                                              lengths, cache)
+        lg = logits[:, -1].astype(jnp.float32)                    # (B, V)
+        greedy = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+        drawn = jax.random.categorical(
+            key, lg / jnp.maximum(temps, 1e-6)[:, None]).astype(jnp.int32)
+        nxt = jnp.where(temps > 0, drawn, greedy)
+        next_buf = jnp.where(lengths > 0, nxt, next_buf)
+        return nxt, next_buf, cache
 
-    def admit(self, req: Request) -> bool:
-        """Prefill the request in an isolated batch=1 cache (chunked, with
-        a single-token tail), then scatter it into a free slot."""
-        free = np.where(~self.active)[0]
-        if free.size == 0:
+    def _sample1_body(self, lg, temp, key):
+        """Single-row sampler for the legacy path's prefill logits —
+        same formula as the batched tick sampler."""
+        lg = lg.reshape(-1).astype(jnp.float32)
+        greedy = jnp.argmax(lg).astype(jnp.int32)
+        drawn = jax.random.categorical(
+            key, lg / jnp.maximum(temp, 1e-6)).astype(jnp.int32)
+        return jnp.where(temp > 0, drawn, greedy)
+
+    def _scatter_body(self, big, one, slot):
+        """Write a batch=1 dense cache into batch row ``slot``.  'pos'
+        leaves carry batch at dim 0, tensor leaves at dim 1."""
+        out = {}
+        for name, ent in big.items():
+            out[name] = {}
+            for k, v in ent.items():
+                o = one[name][k]
+                if k == "pos":
+                    out[name][k] = v.at[slot].set(o[0])
+                else:
+                    out[name][k] = v.at[:, slot].set(o[:, 0])
+        return out
+
+    # ------------------------------------------------------------ admission
+    def _cap_for(self, req: Request) -> int:
+        p = int(len(req.prompt))
+        if p + 1 > self.max_len:
+            raise ValueError(
+                f"request {req.rid}: prompt length {p} does not fit "
+                f"max_len {self.max_len} (need prompt + 1)")
+        return min(req.max_new_tokens, self.max_len - p)
+
+    def _admittable(self, reqs: List[Request]) -> int:
+        """How many of ``reqs`` (in order) this rank can admit now."""
+        free = len(self.sched.free_slots())
+        n, extra = 0, 0
+        for req in reqs[:free]:
+            if self.pool is not None:
+                worst = min(self.pool.blocks_for(len(req.prompt)
+                                                 + self._cap_for(req)),
+                            self.pool.max_blocks_per_slot)
+                if self.pool.committed + extra + worst > self.pool.num_blocks:
+                    break
+                extra += worst
+            n += 1
+        return n
+
+    def admit(self, req: Request, arrival_s: float = 0.0) -> bool:
+        """Admit one request into a free slot; False when full.  Part of
+        the old per-request API — run_to_completion/run_trace admit
+        through the same path with cross-host agreement."""
+        if self.params is None:
+            raise RuntimeError(_LOAD_MSG)
+        if self._admittable([req]) < 1:
             return False
-        slot = int(free[0])
-        self.active[slot] = True
-        self.requests[req.rid] = req
-        self.slot_of[req.rid] = slot
+        self._admit_one(req, arrival_s)
+        return True
+
+    def _admit_one(self, req: Request, arrival_s: float) -> None:
+        slot = self.sched.free_slots()[0]
+        cap = self._cap_for(req)
         req.out_tokens = []
-        prompt = req.prompt.astype(np.int32)
+        self.requests[req.rid] = req
+        self._arrival[req.rid] = arrival_s
+        if cap <= 0:                      # nothing to generate
+            self._finalize(req.rid, arrival_s)
+            return
+        st = self.sched.assign(slot, req.rid, np.asarray(req.prompt),
+                               cap, req.temperature, req.eos_id)
+        self.temps[slot] = req.temperature
+        if self.pool is not None:
+            self.pool.reserve(slot, st.prompt_len + cap)
+        if self.cache_mode == "legacy":
+            self._legacy_prefill(slot, st)
+
+    def _legacy_prefill(self, slot: int, st) -> None:
+        """Isolated batch=1 chunked prefill, scattered into the slot —
+        blocking, but safe for recurrent/MoE archs where padded rows in
+        a shared dispatch are not inert."""
+        prompt = st.prompt
         chunk = self.cfg.prefill_chunk
         cache1 = self.model.init_cache(1, self.max_len)
-        pos = 0
+        pos, logits = 0, None
         while pos < len(prompt):
             n = chunk if len(prompt) - pos >= chunk else 1
             tok = jnp.asarray(prompt[pos:pos + n][None])
             start = jnp.asarray([pos], jnp.int32)
-            _, cache1 = self._extend(self.params, tok, start, cache1, {})
+            logits, cache1 = self._extend(self.params, tok, start, cache1,
+                                          {})
             pos += n
-        self.cache = self._scatter_slot(self.cache, cache1, slot)
-        self.positions[slot] = len(prompt)
-        return True
+        self.cache = self._scatter(self.cache, cache1,
+                                   jnp.asarray(slot, jnp.int32))
+        self.key, sub = jax.random.split(self.key)
+        tok0 = self._sample1(logits, jnp.asarray(st.temperature), sub)
+        self.next_buf = self.next_buf.at[slot].set(tok0)
+        st.fed = st.prompt_len
+        st.sampled = 1
+        self._record(slot, st.epoch, 0, int(tok0), self._now())
 
-    # ------------------------------------------------------------- decode
-    def step(self) -> Dict[int, int]:
-        """One decode step for all active slots; returns {rid: token}."""
-        if not self.active.any():
-            return {}
-        tok = np.zeros((self.slots, 1), np.int32)
-        for rid, slot in self.slot_of.items():
-            req = self.requests[rid]
-            prev = req.out_tokens[-1] if req.out_tokens else \
-                int(req.prompt[-1])
-            tok[slot, 0] = prev
-        logits, self.cache = self._decode(
-            self.params, jnp.asarray(tok), jnp.asarray(self.positions),
-            self.cache)
+    def _admit_arrived(self, queue: List[Tuple[float, Request]],
+                       now: float) -> None:
+        """Admit as many arrived requests as the whole fleet agrees on."""
+        arrived = [r for (t, r) in queue if t <= now]
+        if not arrived:
+            return
+        n = self._admittable(arrived)
+        n = agree_admission_count(self.comm, n)
+        for req in arrived[:n]:
+            idx = next(i for i, (_, r) in enumerate(queue) if r is req)
+            arr, _ = queue.pop(idx)
+            self._admit_one(req, arr)
+
+    # ----------------------------------------------------------------- ticks
+    def _now(self) -> float:
+        return time.perf_counter() - self._t0
+
+    def _pre_dispatch(self, plan: TickPlan) -> None:
+        if self._reset_mask.any():
+            self.cache = self._reset_fn(self.cache,
+                                        jnp.asarray(self._reset_mask))
+            self._reset_mask[:] = False
+        if self.pool is not None:
+            for i in range(self.slots):
+                if plan.lengths[i] > 0:
+                    self.pool.ensure(i, int(plan.starts[i])
+                                     + int(plan.lengths[i]))
+            if self.pool.dirty:
+                bt = jnp.asarray(self.pool.table)
+                for ent in self.cache.values():
+                    if "btab" in ent:
+                        ent["btab"] = bt
+                self.pool.dirty = False
+
+    def _dispatch(self, plan: TickPlan):
+        self._pre_dispatch(plan)
+        self.key, sub = jax.random.split(self.key)
+        nxt, self.next_buf, self.cache = self._dispatch_fn(
+            self.params, jnp.asarray(plan.tokens),
+            jnp.asarray(plan.use_next), jnp.asarray(plan.starts),
+            jnp.asarray(plan.lengths), jnp.asarray(self.temps), sub,
+            self.next_buf, self.cache)
+        return nxt
+
+    def _finish(self, plan: TickPlan, nxt) -> Dict[int, int]:
+        """Host bookkeeping for a completed tick (blocks on the device)."""
+        toks = np.asarray(nxt)
+        now = self._now()
         out: Dict[int, int] = {}
-        logits = np.asarray(logits[:, -1].astype(jnp.float32))
-        done: List[int] = []
-        for rid, slot in self.slot_of.items():
-            req = self.requests[rid]
-            if req.temperature > 0:
-                self.key, sub = jax.random.split(self.key)
-                nxt = int(jax.random.categorical(
-                    sub, jnp.asarray(logits[slot]) / req.temperature))
-            else:
-                nxt = int(logits[slot].argmax())
-            req.out_tokens.append(nxt)
-            self.positions[slot] += 1
-            out[rid] = nxt
-            if len(req.out_tokens) >= req.max_new_tokens \
-                    or self.positions[slot] >= self.max_len - 1:
-                done.append(rid)
-        for rid in done:
-            slot = self.slot_of.pop(rid)
-            self.active[slot] = False
-            self.positions[slot] = 0
+        for slot, epoch, gidx in plan.samples:
+            st = self.sched.states[slot]
+            if st is None or st.epoch != epoch:
+                continue              # slot released mid-flight (EOS)
+            tok = int(toks[slot])
+            out[st.rid] = tok
+            self._record(slot, epoch, gidx, tok, now)
         return out
 
-    def run_to_completion(self, reqs: List[Request], max_steps: int = 10_000
-                          ) -> Dict[int, List[int]]:
-        pending = list(reqs)
-        results: Dict[int, List[int]] = {}
+    def _record(self, slot: int, epoch: int, gidx: int, tok: int,
+                now: float) -> None:
+        st = self.sched.states[slot]
+        req = self.requests[st.rid]
+        req.out_tokens.append(tok)
+        st.recorded = gidx + 1
+        if gidx == 0:
+            self._metrics[st.rid] = {
+                "arrival_s": self._arrival[st.rid],
+                "ttft_s": now - self._arrival[st.rid]}
+        hit_eos = st.eos_id is not None and tok == st.eos_id
+        if hit_eos:
+            st.done = True
+        if hit_eos or st.recorded >= st.cap:
+            self._release(slot)
+            self._finalize(st.rid, now)
+
+    def _release(self, slot: int) -> None:
+        if self.pool is not None:
+            self.pool.release(slot)
+        self._reset_mask[slot] = True
+        self.temps[slot] = 0.0
+        self.sched.release(slot)
+
+    def _finalize(self, rid: int, now: float) -> None:
+        req = self.requests.pop(rid)
+        self._done[rid] = req.out_tokens
+        m = self._metrics.setdefault(
+            rid, {"arrival_s": self._arrival[rid], "ttft_s": None})
+        m["done_s"] = now
+        m["tokens"] = len(req.out_tokens)
+        self._arrival.pop(rid, None)
+
+    def step(self) -> Dict[int, int]:
+        """Plan + dispatch + finish one tick synchronously; returns
+        ``{rid: sampled token}`` for the rows that sampled this tick."""
+        if self.params is None:
+            raise RuntimeError(_LOAD_MSG)
+        plan = self.sched.plan()
+        if plan is None:
+            return {}
+        return self._finish(plan, self._dispatch(plan))
+
+    # ------------------------------------------------------------ run loops
+    def run_to_completion(self, reqs: List[Request],
+                          max_steps: int = 10_000) -> ServeResult:
+        """Serve ``reqs`` (all available immediately) to completion."""
+        return self.run_trace(reqs, [0.0] * len(reqs), max_steps=max_steps)
+
+    def run_trace(self, reqs: List[Request], arrivals_s: List[float],
+                  max_steps: int = 10_000) -> ServeResult:
+        """Serve a timed trace: request i becomes admittable once
+        ``arrivals_s[i]`` seconds have elapsed.  Overlapped loop: tick
+        t+1 is dispatched before tick t's tokens are read back."""
+        if self.params is None:
+            raise RuntimeError(_LOAD_MSG)
+        if len(reqs) != len(arrivals_s):
+            raise ValueError("one arrival time per request")
+        if self.pool is not None:
+            for r in reqs:   # reject never-admittable requests up front
+                worst = self.pool.blocks_for(len(r.prompt)
+                                             + self._cap_for(r))
+                worst = min(worst, self.pool.max_blocks_per_slot)
+                if worst > self.pool.num_blocks:
+                    raise ValueError(
+                        f"request {r.rid} needs {worst} blocks but the "
+                        f"pool holds {self.pool.num_blocks}")
+        self._t0 = time.perf_counter()
+        self._done, self._metrics = {}, {}
+        queue = sorted(zip(arrivals_s, reqs), key=lambda p: p[0])
+        inflight = None
         steps = 0
-        while (pending or self.slot_of) and steps < max_steps:
-            while pending and self.admit(pending[0]):
-                pending.pop(0)
-            self.step()
+        while steps < max_steps:
+            self._admit_arrived(queue, self._now())
+            plan = self.sched.plan()
+            if plan is None:
+                if inflight is not None:
+                    self._finish(*inflight)     # may free slots
+                    inflight = None
+                    continue
+                if queue:
+                    wait = queue[0][0] - self._now()
+                    if wait > 0:
+                        time.sleep(min(wait, 1e-3))
+                    continue
+                break
+            nxt = self._dispatch(plan)
             steps += 1
-            for rid in list(self.requests):
-                if rid not in self.slot_of:
-                    results[rid] = self.requests.pop(rid).out_tokens
+            if inflight is not None:
+                self._finish(*inflight)
+            inflight = (plan, nxt)
+            if not self.overlap:
+                self._finish(*inflight)
+                inflight = None
+        if inflight is not None:
+            self._finish(*inflight)
         self.comm.sync()       # drain: all ranks idle before returning
-        return results
+        unfinished = {st.rid: list(self.requests[st.rid].out_tokens)
+                      for _, st in self.sched.active()}
+        unfinished.update({r.rid: [] for _, r in queue})
+        truncated = bool(unfinished) and steps >= max_steps
+        return ServeResult(self._done, truncated, unfinished,
+                           self._metrics)
+
+    _t0 = 0.0

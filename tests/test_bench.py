@@ -37,14 +37,14 @@ def test_registry_roundtrip_tiny_two_devices():
     out = run_py(ROUNDTRIP, ndev=2)
     assert "OK" in out
     for case in ("p2p", "agg", "bcast", "scatter", "grad_exchange",
-                 "stream"):
+                 "stream", "serving"):
         assert case in out
 
 
 def test_registry_metadata():
     cases = registry.all_cases()
     assert {c.name for c in cases} >= {"p2p", "agg", "bcast", "scatter",
-                                       "grad_exchange", "stream"}
+                                       "grad_exchange", "stream", "serving"}
     for c in cases:
         assert c.ndev >= 1 and c.figure and c.description
     with pytest.raises(ValueError):
@@ -191,4 +191,4 @@ def test_committed_baseline_is_schema_valid():
     doc = results.load(path)
     cases = {r["case"] for r in doc["rows"]}
     assert {"p2p", "agg", "bcast", "scatter", "grad_exchange",
-            "stream"} <= cases
+            "stream", "serving"} <= cases
