@@ -1,0 +1,69 @@
+#!/usr/bin/env python3
+"""Markdown link checker for the repo's docs (CI docs job).
+
+Walks every tracked ``*.md`` file and verifies that each relative link
+target exists on disk.  External links (``http(s)://``, ``mailto:``)
+and pure in-page anchors (``#...``) are skipped — CI must not depend on
+network reachability.  Exit code 0 when every link resolves, 1 with a
+``file:line`` listing otherwise.
+
+    python scripts/check_links.py            # repo root inferred
+    python scripts/check_links.py docs/ a.md # explicit roots/files
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+# [text](target) — stop at the first ')' not preceded by an escape;
+# good enough for the plain relative links these docs use.
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_SKIP_PREFIXES = ("http://", "https://", "mailto:")
+_EXCLUDE_DIRS = {".git", ".pytest_cache", "__pycache__", ".ruff_cache",
+                 "node_modules", ".venv"}
+
+
+def iter_markdown(roots: list[Path]):
+    for root in roots:
+        if root.is_file():
+            yield root
+            continue
+        for p in sorted(root.rglob("*.md")):
+            if not _EXCLUDE_DIRS.intersection(p.parts):
+                yield p
+
+
+def check_file(md: Path) -> list[str]:
+    errors = []
+    for lineno, line in enumerate(md.read_text().splitlines(), 1):
+        for m in _LINK.finditer(line):
+            target = m.group(1)
+            if target.startswith(_SKIP_PREFIXES) or target.startswith("#"):
+                continue
+            path_part = target.split("#", 1)[0]
+            if not path_part:
+                continue
+            resolved = (md.parent / path_part).resolve()
+            if not resolved.exists():
+                errors.append(f"{md}:{lineno}: broken link -> {target}")
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    roots = ([Path(a) for a in argv]
+             if argv else [Path(__file__).resolve().parent.parent])
+    errors = []
+    n = 0
+    for md in iter_markdown(roots):
+        n += 1
+        errors.extend(check_file(md))
+    for e in errors:
+        print(e)
+    print(f"checked {n} markdown files: "
+          f"{'OK' if not errors else f'{len(errors)} broken link(s)'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

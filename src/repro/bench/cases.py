@@ -181,6 +181,82 @@ def run_scatter(ctx: BenchContext):
                               stats=st)
 
 
+# ---------------------------------------------------- alltoall / MoE
+
+
+@register_case("alltoall", figure="fig3+moe", ndev=8,
+               description="all-to-all message-size sweep across "
+                           "transports, ragged alltoallv, and "
+                           "expert-parallel MoE dispatch tokens/sec")
+def run_alltoall(ctx: BenchContext):
+    import jax
+    import jax.numpy as jnp
+
+    # --- message-size sweep (the Fig 2/3 discipline applied to the
+    # routed-exchange collective OMB-Py benchmarks as a core family)
+    for n, comms, spec in _rank_sweep(ctx):
+        for size in ctx.profile.coll_sizes:
+            elems = max(size // 4, n)
+            elems -= elems % n
+            x = jnp.ones((n, elems), jnp.float32)
+            for tname in ("native", "tree", "serial"):
+                comm = comms[tname]
+
+                def body(a, c=comm, nn=n):
+                    out = c.alltoall(a.reshape(nn, -1))
+                    return out.reshape(1, -1).mean(1, keepdims=True)
+                f = jax.jit(comm.wrap(body, in_specs=(spec,),
+                                      out_specs=spec))
+                st = ctx.measure(f, x)
+                yield ctx.row(f"alltoall_{tname}_r{n}_{size}B",
+                              transport=tname, ranks=n, size_bytes=size,
+                              stats=st,
+                              gbps=gbps(size, st["median_us"]))
+        # ragged exchange: one alltoallv row per rank count at the
+        # mid-profile size, asymmetric static count matrix
+        size = ctx.profile.coll_sizes[len(ctx.profile.coll_sizes) // 2]
+        base = max(size // 4 // n, 1)
+        counts = [[base * ((i + 2 * j) % 3 + 1) for j in range(n)]
+                  for i in range(n)]
+        S = max(sum(r) for r in counts)
+        xv = jnp.ones((n, S), jnp.float32)
+        for tname in ("native", "tree"):
+            comm = comms[tname]
+
+            def bodyv(a, c=comm, cnt=counts, s=S):
+                out = c.alltoallv(a.reshape(s, 1), cnt)
+                return out.reshape(1, -1).mean(1, keepdims=True)
+            f = jax.jit(comm.wrap(bodyv, in_specs=(spec,),
+                                  out_specs=spec))
+            st = ctx.measure(f, xv)
+            yield ctx.row(f"alltoallv_{tname}_r{n}_{size}B",
+                          transport=tname, ranks=n, size_bytes=size,
+                          stats=st)
+
+    # --- MoE expert-parallel dispatch at model scale: two alltoalls
+    # (dispatch + combine) per step through the same Communicator
+    from repro.models.moe import moe_ffn, moe_init
+
+    pr = ctx.profile
+    m = 1 << (ctx.ndev.bit_length() - 1)        # model-axis power of two
+    mesh = jax.make_mesh((1, m), ("data", "model"))
+    E = max(pr.moe_experts // m, 1) * m
+    T = max(pr.moe_tokens // m, 1) * m
+    key = jax.random.PRNGKey(0)
+    params = moe_init(key, pr.moe_d_model, pr.moe_d_ff, E)
+    x = jax.random.normal(key, (1, T, pr.moe_d_model), jnp.bfloat16)
+    for tname in ("native", "tree"):
+        f = jax.jit(lambda p, v, t=tname: moe_ffn(
+            p, v, top_k=pr.moe_top_k, num_experts=E,
+            capacity_factor=2.0, mesh=mesh, batch_axes=("data",),
+            mode="scatter", comm=t)[0])
+        st = ctx.measure(f, params, x)
+        toks = T / (st["median_us"] * 1e-6)
+        yield ctx.row(f"moe_dispatch_{tname}_t{T}", transport=tname,
+                      ranks=m, size_bytes=T * pr.moe_d_model * 2,
+                      stats=st, note=f"tok/s={toks:.0f}")
+
+
 # -------------------------------------------------------- grad exchange
 
 

@@ -43,6 +43,12 @@ class Profile:
     serve_slots: int = 3                # engine decode batch
     serve_max_len: int = 64             # engine cache length
     serve_rate: float = 200.0           # mean Poisson arrivals per second
+    # alltoall case (repro/bench/cases.py): MoE dispatch sub-benchmark
+    moe_tokens: int = 64                # routed tokens per step
+    moe_d_model: int = 32               # token width
+    moe_d_ff: int = 64                  # expert FFN width
+    moe_experts: int = 4                # global expert count (>= ranks)
+    moe_top_k: int = 2                  # experts per token
 
 
 PROFILES: Dict[str, Profile] = {
@@ -54,7 +60,9 @@ PROFILES: Dict[str, Profile] = {
                     gradex_bytes=4 * 1024 * 1024, modeled=True,
                     serve_requests=16, serve_prompt_len=48,
                     serve_new_tokens=16, serve_slots=4,
-                    serve_max_len=128, serve_rate=100.0),
+                    serve_max_len=128, serve_rate=100.0,
+                    moe_tokens=2048, moe_d_model=256, moe_d_ff=512,
+                    moe_experts=16, moe_top_k=2),
     "ci": Profile("ci", warmup=2, iters=7,
                   p2p_sizes=(16, 1024, 64 * 1024, 1024 * 1024),
                   coll_sizes=(8, 8 * 1024, 256 * 1024),
@@ -63,7 +71,9 @@ PROFILES: Dict[str, Profile] = {
                   gradex_bytes=1024 * 1024, modeled=True,
                   serve_requests=8, serve_prompt_len=32,
                   serve_new_tokens=8, serve_slots=3,
-                  serve_max_len=64, serve_rate=200.0),
+                  serve_max_len=64, serve_rate=200.0,
+                  moe_tokens=512, moe_d_model=128, moe_d_ff=256,
+                  moe_experts=8, moe_top_k=2),
     "tiny": Profile("tiny", warmup=1, iters=2,
                     p2p_sizes=(16, 256),
                     coll_sizes=(8, 1024),

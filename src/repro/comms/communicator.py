@@ -7,7 +7,8 @@ constructed once from a mesh (hierarchy derived in one place by
 ``Topology.from_mesh``), it exposes
 
   in-shard_map ops   send / recv / sendrecv / barrier / bcast / agg /
-                     scatter / allreduce / reduce_scatter / allgather
+                     scatter / allreduce / reduce_scatter / allgather /
+                     alltoall / alltoallv
   jit-level entry    comm.run(fn, *args) / comm.wrap(fn)  — so callers
                      never hand-roll their own ``shard_map``
 
@@ -31,7 +32,7 @@ from repro.comms.transports import Transport, get_transport
 Array = jax.Array
 
 _OPS = ("allreduce", "bcast", "agg", "reduce_scatter", "allgather",
-        "scatter")
+        "scatter", "alltoall")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -44,6 +45,7 @@ class CommSpec:
     reduce_scatter: str = "native"
     allgather: str = "native"
     scatter: str = "native"
+    alltoall: str = "native"            # also drives alltoallv
 
     @classmethod
     def from_flag(cls, flag: str) -> "CommSpec":
@@ -162,6 +164,29 @@ class Communicator:
     def allgather(self, x: Any) -> Any:
         """agg visible on every rank (pPython's agg() + bcast)."""
         return jax.tree.map(self._t["allgather"].allgather, x)
+
+    def alltoall(self, x: Any) -> Any:
+        """MPI Alltoall — the token-routed exchange under expert-parallel
+        MoE dispatch: each leaf's leading dim splits into ``size`` equal
+        per-destination blocks; rank i's block j arrives as rank j's
+        block i.  Algorithm from ``spec.alltoall`` (XLA ``all_to_all``
+        for 'native'; scheduled pairwise ppermute rounds otherwise)."""
+        return jax.tree.map(self._t["alltoall"].alltoall, x)
+
+    def alltoallv(self, x: Any, counts) -> Any:
+        """Ragged Alltoall (MPI Alltoallv): ``counts`` is a static
+        (size, size) matrix, ``counts[i][j]`` = rows rank i sends to
+        rank j.  Leaf rows are packed destination-ordered on the way in
+        and source-ordered (zero-padded tail) on the way out; see
+        ``Transport.alltoallv`` for the exact layout.  Uses the
+        ``spec.alltoall`` transport."""
+        counts = tuple(tuple(int(c) for c in r) for r in counts)
+        if len(counts) != self.size or any(len(r) != self.size
+                                           for r in counts):
+            raise ValueError(f"counts must be {self.size}x{self.size} "
+                             f"for axes {self.axes}")
+        return jax.tree.map(
+            lambda v: self._t["alltoall"].alltoallv(v, counts), x)
 
     # ------------------------------------------------------- jit-level entry
     def wrap(self, fn: Callable, *, in_specs=None, out_specs=None,

@@ -161,6 +161,21 @@ def all_gather_tiled(x, axis):
     return lax.psum(buf, axis)
 
 
+def all_to_all_blocks(x, axis, dim=0):
+    """Single-axis ``lax.all_to_all`` with split and concat on the same
+    dim: ``x`` has one block per destination along ``dim`` (size n =
+    ranks on ``axis``); the result holds one block per *source* (block s
+    = rank s's block addressed to this rank).  Emulated as full
+    all-gather + source-column selection when required."""
+    ctx = _EMU.get()
+    if ctx is None:
+        return lax.all_to_all(x, axis, dim, dim, tiled=False)
+    me = _coord(ctx, axis)
+    full = all_gather_tiled(x.reshape(-1), axis).reshape((-1,) + x.shape)
+    col = lax.dynamic_index_in_dim(full, me, axis=1 + dim, keepdims=False)
+    return jnp.moveaxis(col, 0, dim)
+
+
 def psum_scatter_blocks(x, axis):
     """``lax.psum_scatter`` of ``x`` shaped (n_ranks_along_axis, blk):
     global sum, each rank keeping its own block — emulated as full psum +

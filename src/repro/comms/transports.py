@@ -75,9 +75,21 @@ class Transport(abc.ABC):
       * reduce_scatter(x)   -> global sum, each rank keeping its own
                                1/n block of the (zero-padded) flat value;
                                shape (ceil(x.size / n),).
+      * alltoall(x)         -> x's leading dim split into n equal
+                               per-destination blocks; block j of the
+                               result is rank j's block addressed to
+                               this rank (MPI Alltoall).
+      * alltoallv(x, counts)-> ragged Alltoall: static (n, n) count
+                               matrix, rows packed destination-ordered
+                               in, source-ordered out (see method doc).
     """
 
     name: str = "?"
+    # all-to-all knobs: ``a2a_serial`` switches the scheduled exchange to
+    # the one-pair-per-round baseline; ``compress`` ('int8') quantizes
+    # cross-pod round payloads (floating dtypes only).
+    a2a_serial: bool = False
+    compress: Optional[str] = None
 
     def __init__(self, topo: Topology):
         self.topo = topo
@@ -110,7 +122,99 @@ class Transport(abc.ABC):
     def reduce_scatter(self, x: Array) -> Array:
         return self._own_block(self.allreduce(x).reshape(-1))
 
+    def alltoall(self, x: Array) -> Array:
+        """MPI Alltoall (token-routed exchange, the MoE dispatch
+        primitive).  Default schedule: per-axis pairwise ppermute rounds
+        (``coll.pairwise_alltoall_axis``), in-axes (ICI) exchanged before
+        the pod (DCI) axis — node-aware, the Fig 4/6 discipline applied
+        to the routed-exchange pattern.  ``native`` overrides with XLA's
+        ``all_to_all``."""
+        def leg(blocks, axis, dim):
+            comp = self.compress if axis == self.topo.pod_axis else None
+            return coll.pairwise_alltoall_axis(
+                blocks, axis, dim=dim, serial=self.a2a_serial,
+                compress=comp)
+        return self._per_axis_alltoall(x, leg)
+
+    def alltoallv(self, x: Array, counts) -> Array:
+        """Ragged Alltoall (MPI Alltoallv) with a *static* (n, n) count
+        matrix — ``counts[i][j]`` rows travel from rank i to rank j (SPMD
+        programs need static shapes, so the full matrix is trace-time
+        data; validity is positional).
+
+        Input: rank i's payload is the first ``sum(counts[i])`` rows of
+        ``x``, ordered by destination; the static leading dim must cover
+        the largest sender.  Output: shape (max_recv_total, ...), this
+        rank's valid rows are the first ``sum(counts[:][rank])``, ordered
+        by source; the tail is zero-padded.  Runs over this transport's
+        ``alltoall`` on per-destination blocks padded to the matrix
+        maximum, so every transport's schedule applies unchanged."""
+        import numpy as np
+        n = self.topo.n_ranks
+        cm = np.asarray(counts, dtype=np.int32)
+        if cm.shape != (n, n) or (cm < 0).any():
+            raise ValueError(f"counts must be a non-negative ({n}, {n}) "
+                             f"matrix, got shape {cm.shape}")
+        need = int(cm.sum(axis=1).max())
+        if x.shape[0] < need:
+            raise ValueError(f"alltoallv buffer holds {x.shape[0]} rows; "
+                             f"largest sender needs {need}")
+        C = max(int(cm.max()), 1)
+        R = max(int(cm.sum(axis=0).max()), 1)
+        me = self.topo.rank()
+        cj = jnp.asarray(cm)
+        lane = jnp.arange(C, dtype=jnp.int32)
+
+        # pack: destination-ordered compact rows -> (n, C) padded blocks
+        row = cj[me]                                   # my send counts
+        off = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                               jnp.cumsum(row)[:-1]])
+        src_idx = off[:, None] + lane[None, :]
+        valid = lane[None, :] < row[:, None]
+        shp = (1,) * (x.ndim - 1)
+        packed = jnp.where(
+            valid.reshape(valid.shape + shp),
+            jnp.take(x, jnp.clip(src_idx, 0, x.shape[0] - 1), axis=0),
+            0)
+
+        recv = self.alltoall(packed.reshape((n * C,) + x.shape[1:]))
+        recv = recv.reshape((n, C) + x.shape[1:])
+
+        # unpack: (n, C) padded blocks -> source-ordered compact rows
+        col = cj[:, me]                                # my recv counts
+        out_off = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                                   jnp.cumsum(col)[:-1]])
+        dst_idx = out_off[:, None] + lane[None, :]
+        valid2 = lane[None, :] < col[:, None]
+        dst_idx = jnp.where(valid2, dst_idx, R)        # pad rows -> drop
+        out = jnp.zeros((R,) + x.shape[1:], x.dtype)
+        return out.at[dst_idx.reshape(-1)].set(
+            recv.reshape((n * C,) + x.shape[1:]), mode="drop")
+
     # ------------------------------------------------------------- helpers
+    def _per_axis_alltoall(self, x: Array, leg) -> Array:
+        """Decompose a composite-rank all-to-all into one exchange per
+        topology axis.  ``x``'s leading dim is viewed as one block per
+        destination rank (linear C-order); axis i's exchange runs on dim
+        i of the (axis_sizes..., blk, ...) view — the per-axis results
+        compose to the full rank-space exchange.  In-axes run first (the
+        ICI level), the pod axis last (DCI)."""
+        n = self.topo.n_ranks
+        if x.shape[0] % n:
+            raise ValueError(f"alltoall leading dim {x.shape[0]} not "
+                             f"divisible by {n} ranks")
+        if n == 1:
+            return x
+        shape = x.shape
+        sizes = self.topo.axis_sizes
+        blocks = x.reshape(tuple(sizes) + (shape[0] // n,) + shape[1:])
+        npod = 1 if self.topo.pod_axis else 0
+        order = (tuple(enumerate(self.topo.axes))[npod:]
+                 + tuple(enumerate(self.topo.axes))[:npod])
+        for dim, axis in order:
+            blocks = leg(blocks, axis, dim)
+        return blocks.reshape(shape)
+
     def _own_block(self, flat: Array) -> Array:
         """This rank's 1/n block of a replicated flat buffer, zero-padded
         to n equal blocks of ceil(size / n)."""
@@ -161,6 +265,11 @@ class NativeTransport(Transport):
         return compat.psum_scatter_blocks(flat.reshape(n, blk),
                                           self.topo.axes)
 
+    def alltoall(self, x):
+        return self._per_axis_alltoall(
+            x, lambda blocks, axis, dim:
+               compat.all_to_all_blocks(blocks, axis, dim))
+
 
 @register_transport("tree")
 class TreeTransport(Transport):
@@ -184,8 +293,11 @@ class TreeTransport(Transport):
 @register_transport("serial")
 class SerialTransport(TreeTransport):
     """The paper's *initial* serialized broadcast — kept for the Fig 7
-    comparison.  The broadcast half of allreduce serializes too, so this
-    transport is a genuine P-1-round baseline, not an alias of 'tree'."""
+    comparison.  The broadcast half of allreduce serializes too, and the
+    all-to-all runs one (src, dst) pair per round, so this transport is a
+    genuine serialized baseline, not an alias of 'tree'."""
+
+    a2a_serial = True
 
     def allreduce(self, x):
         return coll.tree_allreduce_local(x, pod_axis=self.topo.pod_axis,

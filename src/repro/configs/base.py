@@ -77,6 +77,9 @@ class ArchConfig:
     first_dense_layers: int = 0    # leading dense layers (Kimi-K2 style)
     dense_d_ff: int = 0            # d_ff of the dense layers in MoE archs
     capacity_factor: float = 1.25
+    # transport carrying the expert-parallel dispatch/combine exchange
+    # (repro.comms registry name; see Communicator.alltoall)
+    moe_comms: str = "native"
 
     # --- SSM / hybrid ------------------------------------------------------
     ssm_state: int = 0

@@ -112,6 +112,62 @@ def tree_gather_axis(x: Array, axis: str, root: int = 0) -> Array:
     return jnp.where(me == root, full, jnp.zeros((n * local,), x.dtype))
 
 
+def pairwise_alltoall_axis(x: Array, axis: str, *, dim: int = 0,
+                           serial: bool = False,
+                           compress: Optional[str] = None) -> Array:
+    """In-shard_map all-to-all along one mesh axis via explicit
+    ``ppermute`` rounds (the scheduled-transport analogue of
+    ``lax.all_to_all``).
+
+    ``x`` carries one block per destination rank along ``dim`` (size n);
+    the result has the same shape with block s along ``dim`` holding rank
+    s's block addressed to this rank.  The schedule comes from
+    ``topology.pairwise_alltoall_rounds``: disjoint XOR partner pairs for
+    power-of-two n (nearest neighbours first), rotation rounds otherwise,
+    or one-pair-per-round when ``serial=True`` (the paper's serialized
+    baseline).  ``compress='int8'`` quantizes floating payloads per round
+    (per-block scale) — used by ``hier_int8`` on the cross-pod axis.
+    """
+    n = _axis_size(axis)
+    if n == 1:
+        return x
+    me = _axis_index(axis)
+    do_compress = (compress == "int8"
+                   and jnp.issubdtype(x.dtype, jnp.floating))
+
+    def exchange(blk, perm):
+        if not do_compress:
+            return _ppermute(blk, axis, perm)
+        amax = jnp.max(jnp.abs(blk.astype(jnp.float32)))
+        scale = jnp.maximum(amax, 1e-8) / 127.0
+        q = jnp.clip(jnp.round(blk.astype(jnp.float32) / scale),
+                     -127, 127).astype(jnp.int8)
+        qr = _ppermute(q, axis, perm)
+        sr = _ppermute(scale, axis, perm)
+        return (qr.astype(jnp.float32) * sr).astype(blk.dtype)
+
+    out = x
+    for kind, arg, perm in topology.pairwise_alltoall_rounds(n, serial):
+        if kind == "pair":                  # static (src, dst), one pair
+            s, d = arg
+            recv = exchange(lax.slice_in_dim(x, d, d + 1, axis=dim), perm)
+            keep = lax.slice_in_dim(out, s, s + 1, axis=dim)
+            upd = jnp.where(me == d, recv, keep)
+            out = lax.dynamic_update_slice_in_dim(out, upd, s, axis=dim)
+            continue
+        if kind == "xor":                   # partner = me ^ k
+            send_to = jnp.bitwise_xor(me, arg)
+            recv_from = send_to
+        else:                               # rotation by k
+            send_to = (me + arg) % n
+            recv_from = (me - arg) % n
+        blk = lax.dynamic_slice_in_dim(x, send_to, 1, axis=dim)
+        recv = exchange(blk, perm)
+        out = lax.dynamic_update_slice_in_dim(out, recv, recv_from,
+                                              axis=dim)
+    return out
+
+
 def ring_allgather_axis(x: Array, axis: str) -> Array:
     """Ring all-gather via n-1 ppermutes (bandwidth-optimal reference for
     the benchmark harness)."""

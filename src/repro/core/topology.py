@@ -70,6 +70,33 @@ def ring_rounds(n: int, shift: int = 1) -> List[Round]:
     return [[(i, (i + shift) % n) for i in range(n)]]
 
 
+def pairwise_alltoall_rounds(n: int, serial: bool = False
+                             ) -> List[Tuple[str, object, Round]]:
+    """Schedules for the pairwise-exchange all-to-all along one axis.
+
+    Returns ``(kind, arg, perm)`` rounds:
+
+    * ``("xor", k, perm)``   — power-of-two n: round k pairs rank i with
+      i^k (disjoint partner pairs, every link busy).  Ascending k means
+      nearest neighbours exchange first — composed per-axis by the
+      transport layer (in-axes before the pod axis), this is the
+      node-aware ordering: all ICI rounds complete before any DCI round.
+    * ``("rot", k, perm)``   — general n: round k shifts by k (send to
+      i+k, receive from i-k), the classic n-1-round rotation exchange.
+    * ``("pair", (s, d), perm)`` — ``serial=True``: one (src, dst) pair
+      per round, n*(n-1) rounds — the all-to-all analogue of the paper's
+      *initial* serialized broadcast (Fig 7 baseline).
+    """
+    if serial:
+        return [("pair", (s, d), [(s, d)])
+                for s in range(n) for d in range(n) if s != d]
+    if n & (n - 1) == 0:
+        return [("xor", k, [(i, i ^ k) for i in range(n)])
+                for k in range(1, n)]
+    return [("rot", k, [(i, (i + k) % n) for i in range(n)])
+            for k in range(1, n)]
+
+
 def bcast_round_count(n: int, tree: bool) -> int:
     return _ceil_log2(n) if tree else max(n - 1, 0)
 

@@ -24,6 +24,12 @@ def main() -> None:
                              "hier_int8"),
                     help="'auto' = GSPMD; otherwise the transport a "
                          "CommSpec binds to the batch-axis Communicator")
+    ap.add_argument("--moe-comms", default="",
+                    choices=("", "native", "tree", "serial", "hier",
+                             "hier_int8"),
+                    help="transport for the expert-parallel MoE "
+                         "dispatch/combine all-to-all (default: the "
+                         "arch config's moe_comms, usually 'native')")
     ap.add_argument("--checkpoint-every", type=int, default=50)
     ap.add_argument("--reduced", action="store_true",
                     help="reduced config (CPU-scale smoke)")
@@ -49,6 +55,9 @@ def main() -> None:
     if args.reduced:
         cfg = reduced(cfg)
         shape = ShapeSpec("reduced", "train", 128, 8)
+    if args.moe_comms:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, moe_comms=args.moe_comms)
 
     n = len(jax.devices())
     if args.mesh:

@@ -155,6 +155,7 @@ class Model:
         return dict(top_k=self.cfg.top_k, num_experts=self.cfg.num_experts,
                     capacity_factor=self.cfg.capacity_factor, mesh=mesh,
                     batch_axes=batch_axes, fsdp_axes=tuple(kept),
+                    comm=self.cfg.moe_comms,
                     gather_dtype=self.cfg.expert_gather_dtype)
 
     # --- init ---------------------------------------------------------------

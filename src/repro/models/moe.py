@@ -1,20 +1,33 @@
-"""Expert-parallel Mixture-of-Experts FFN.
+"""Expert-parallel Mixture-of-Experts FFN, routed over the Communicator.
 
-Experts are sharded over the ``model`` mesh axis.  Two dispatch modes:
+Experts are sharded over the ``model`` mesh axis.  All expert-parallel
+communication goes through a model-axis-bound
+:class:`~repro.comms.Communicator` — the same swappable, benchmarkable
+transport stack (``native`` / ``tree`` / ``serial`` / ``hier`` /
+``hier_int8``) that carries every other collective in the repo; there
+are no direct ``lax.all_to_all`` calls here.  The transport is selected
+by the ``comm`` argument (a registry name, a ``CommSpec``, or a
+prebuilt ``Communicator``; ``ArchConfig.moe_comms`` / ``--moe-comms``
+upstream), and the ``alltoall`` bench case family watches every option.
+
+Two dispatch modes, trading exchange latency against replicated compute:
 
 * ``scatter`` (train / chunked prefill): tokens are sharded over *all*
   mesh axes (batch over data/pod, sequence over model); each device
-  routes its own tokens and exchanges them with the expert owners via two
-  ``lax.all_to_all``s (dispatch + return).  Fixed per-destination
-  capacity, overflow dropped (standard dropping MoE).  The all-to-all
-  bytes are explicit in the lowered HLO — exactly what the roofline
-  collective term wants to see.
+  routes its own tokens and exchanges them with the expert owners via
+  two ``Communicator.alltoall``s (dispatch + combine).  Fixed
+  per-destination capacity, overflow dropped (standard dropping MoE).
+  The exchange bytes are explicit in the lowered HLO — exactly what the
+  roofline collective term wants to see — and because the all-to-all is
+  pure data movement, scatter-mode outputs are *bitwise identical*
+  across transports (property-tested in tests/test_alltoall.py).
 
 * ``replicated`` (decode): token counts are tiny (B tokens), so every
   model-rank routes the full local batch, computes only the assignments
   that land on its own experts, and partial results are combined with a
-  single ``psum`` over the model axis.  No all-to-all latency on the
-  critical decode path.
+  single ``Communicator.allreduce`` over the model axis.  No all-to-all
+  latency on the critical decode path, at the cost of every rank running
+  the router on the full batch.
 
 Compute is a batched einsum over the local expert block — FLOPs are
 proportional to *active* parameters (x capacity factor), never to the
@@ -25,13 +38,14 @@ from __future__ import annotations
 
 import functools
 import math
-from typing import Dict, Optional, Sequence, Tuple
+from typing import Dict, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.comms.communicator import CommSpec, Communicator
 from repro.comms.compat import (axis_index, axis_size,
                                 shard_map)
 
@@ -127,7 +141,7 @@ def _moe_scatter_local(x: Array, wr: Array, w1: Array, w3: Array, w2: Array,
                        *, top_k: int, num_experts: int, model_size: int,
                        capacity_factor: float,
                        fsdp_axes: Sequence[str],
-                       model_axis: str,
+                       model_axis: str, comm: Communicator,
                        gather_dtype: str = "bf16") -> Tuple[Array, Array]:
     """Per-device body (inside shard_map).  x: (Tl, D) local tokens."""
     Tl, D = x.shape
@@ -157,10 +171,10 @@ def _moe_scatter_local(x: Array, wr: Array, w1: Array, w3: Array, w2: Array,
     send_leid = jnp.full((M * C,), -1, jnp.int32).at[slot].set(
         leid, mode="drop")
 
-    recv_x = lax.all_to_all(send_x.reshape(M, C, D), model_axis, 0, 0,
-                            tiled=False).reshape(M * C, D)
-    recv_leid = lax.all_to_all(send_leid.reshape(M, C), model_axis, 0, 0,
-                               tiled=False).reshape(M * C)
+    # dispatch: per-destination blocks -> expert owners, through the
+    # Communicator's swappable alltoall (pure data movement — outputs
+    # are transport-invariant bit-for-bit)
+    recv_x, recv_leid = comm.alltoall((send_x, send_leid))
 
     R = M * C
     Ce = _round_up(max(int(math.ceil(R / E_loc * capacity_factor)), 8), 8)
@@ -177,8 +191,7 @@ def _moe_scatter_local(x: Array, wr: Array, w1: Array, w3: Array, w2: Array,
     out_r = jnp.where(keep2[:, None],
                       jnp.take(y, jnp.minimum(slot2, E_loc * Ce - 1), axis=0),
                       0).astype(x.dtype)
-    back = lax.all_to_all(out_r.reshape(M, C, D), model_axis, 0, 0,
-                          tiled=False).reshape(M * C, D)
+    back = comm.alltoall(out_r)          # combine: results -> token owners
 
     y_a = jnp.where(keep[:, None],
                     jnp.take(back, jnp.minimum(slot, M * C - 1), axis=0),
@@ -195,10 +208,11 @@ def _moe_scatter_local(x: Array, wr: Array, w1: Array, w3: Array, w2: Array,
 def _moe_replicated_local(x: Array, wr: Array, w1: Array, w3: Array,
                           w2: Array, *, top_k: int, num_experts: int,
                           model_size: int, fsdp_axes: Sequence[str],
-                          model_axis: str,
+                          model_axis: str, comm: Communicator,
                           gather_dtype: str = "bf16") -> Tuple[Array, Array]:
     """Decode path: x (Tl, D) replicated over the model axis; each rank
-    computes only assignments hitting its local experts; psum combines."""
+    computes only assignments hitting its local experts; the
+    Communicator's allreduce combines the partial results."""
     Tl, D = x.shape
     M, E = model_size, num_experts
     E_loc = E // M
@@ -228,7 +242,7 @@ def _moe_replicated_local(x: Array, wr: Array, w1: Array, w3: Array,
                     jnp.take(y, jnp.minimum(slot, E_loc * Ce - 1), axis=0), 0)
     y_tok = jnp.sum(y_a.reshape(Tl, top_k, D)
                     * w_f.reshape(Tl, top_k, 1).astype(x.dtype), axis=1)
-    y_tok = lax.psum(y_tok, model_axis)
+    y_tok = comm.allreduce(y_tok)
     return y_tok, jnp.zeros((), jnp.float32)
 
 
@@ -240,13 +254,19 @@ def moe_ffn(params: Dict[str, Array], x: Array, *, top_k: int,
             num_experts: int, capacity_factor: float, mesh: Mesh,
             batch_axes: Tuple[str, ...], model_axis: str = "model",
             fsdp_axes: Tuple[str, ...] = (), mode: str = "scatter",
+            comm: Union[str, CommSpec, Communicator, None] = None,
             gather_dtype: str = "bf16") -> Tuple[Array, Array]:
     """MoE FFN.  x: (B, T, D) -> (B, T, D), aux-loss scalar.
 
-    In scatter mode the T axis must be divisible by the model-axis size.
+    ``comm`` picks the transport carrying the expert exchange: a
+    registry name ('native', 'tree', ...), a ``CommSpec``, or a prebuilt
+    model-axis ``Communicator``; None means 'native'.  In scatter mode
+    the T axis must be divisible by the model-axis size.
     """
     B, T, D = x.shape
     M = mesh.shape[model_axis]
+    if not isinstance(comm, Communicator):
+        comm = Communicator.for_mesh(mesh, comm, axes=(model_axis,))
     expert_spec1 = P(model_axis, None, fsdp_axes if fsdp_axes else None)
     expert_spec2 = P(model_axis, fsdp_axes if fsdp_axes else None, None)
 
@@ -255,14 +275,14 @@ def moe_ffn(params: Dict[str, Array], x: Array, *, top_k: int,
         body = functools.partial(
             _moe_scatter_local, top_k=top_k, num_experts=num_experts,
             model_size=M, capacity_factor=capacity_factor,
-            fsdp_axes=fsdp_axes, model_axis=model_axis,
+            fsdp_axes=fsdp_axes, model_axis=model_axis, comm=comm,
             gather_dtype=gather_dtype)
     else:
         x_spec = P(batch_axes, None, None)
         body = functools.partial(
             _moe_replicated_local, top_k=top_k, num_experts=num_experts,
             model_size=M, fsdp_axes=fsdp_axes, model_axis=model_axis,
-            gather_dtype=gather_dtype)
+            comm=comm, gather_dtype=gather_dtype)
 
     def local(x3, wr, w1, w3_, w2):
         b, t, d = x3.shape

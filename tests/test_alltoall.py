@@ -1,0 +1,157 @@
+"""All-to-all on the Communicator: five-transport equivalence against a
+dense numpy oracle (multi-pod mesh), ragged alltoallv splits, and MoE
+scatter-mode bitwise stability under transport swap (subprocesses, 8
+virtual CPUs)."""
+import pytest
+
+from tests._subproc import run_py
+
+TRANSPORTS = ("native", "tree", "serial", "hier", "hier_int8")
+
+# out[r] block s == in[s] block r — the dense transpose oracle; blocks
+# carry unique values so any mis-routed block is caught.
+A2A = """
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.comms import Communicator
+from repro.launch.mesh import make_local_mesh
+
+mesh = make_local_mesh({data}, {model}, pod={pod})
+spec = P(tuple(mesh.axis_names))
+n = 8
+v = jnp.arange(n * n * 3, dtype=jnp.float32).reshape(n, n * 3) + 1
+exp = np.transpose(np.asarray(v).reshape(n, n, 3), (1, 0, 2))
+
+name = "{name}"
+comm = Communicator(mesh, name)
+out = comm.run(lambda a: comm.alltoall(a.reshape(n, 3)).reshape(1, -1),
+               v, in_specs=(spec,), out_specs=spec)
+got = np.asarray(out).reshape(n, n, 3)
+if name == "hier_int8" and {pod}:       # cross-pod rounds are int8-lossy
+    assert np.allclose(got, exp, rtol=0.02, atol=0.5), got - exp
+else:                                    # pure data movement: bit-exact
+    assert np.array_equal(got, exp), got - exp
+
+# pytree payloads travel together (the MoE dispatch carries (x, leid))
+tree = {{"x": v, "i": (v * 2).astype(jnp.int32)}}
+pair = comm.run(
+    lambda d: jax.tree.map(
+        lambda l: comm.alltoall(l.reshape(n, -1)).reshape(1, -1), d),
+    tree, in_specs=({{"x": spec, "i": spec}},),
+    out_specs={{"x": spec, "i": spec}})
+assert np.array_equal(np.asarray(pair["i"]).reshape(n, n, 3),
+                      (exp * 2).astype(np.int32)), "int leaf"
+print("OK")
+"""
+
+
+@pytest.mark.parametrize("name", TRANSPORTS)
+def test_alltoall_matches_oracle_multi_pod(name):
+    assert "OK" in run_py(A2A.format(name=name, data=2, model=2, pod=2))
+
+
+@pytest.mark.parametrize("name", ("tree", "serial"))
+def test_alltoall_matches_oracle_single_pod(name):
+    assert "OK" in run_py(A2A.format(name=name, data=2, model=4, pod=0))
+
+
+# alltoallv: asymmetric static count matrix, destination-ordered rows in,
+# source-ordered rows out, zero-padded tails.
+A2AV = """
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.comms import Communicator
+from repro.launch.mesh import make_local_mesh
+
+mesh = make_local_mesh(2, 2, pod=2)
+spec = P(tuple(mesh.axis_names))
+n = 8
+counts = [[(i + 2 * j) % 4 for j in range(n)] for i in range(n)]
+cm = np.asarray(counts)
+S = int(cm.sum(1).max())
+R = int(cm.sum(0).max())
+x = jnp.arange(n * S * 2, dtype=jnp.float32).reshape(n, S * 2) + 1
+xr = np.asarray(x).reshape(n, S, 2)
+exp = np.zeros((n, R, 2), np.float32)
+for r in range(n):
+    off_out = 0
+    for s in range(n):
+        c = cm[s, r]
+        off_in = int(cm[s, :r].sum())
+        exp[r, off_out:off_out + c] = xr[s, off_in:off_in + c]
+        off_out += c
+
+name = "{name}"
+comm = Communicator(mesh, name)
+out = comm.run(
+    lambda a: comm.alltoallv(a.reshape(S, 2), counts).reshape(1, -1),
+    x, in_specs=(spec,), out_specs=spec)
+got = np.asarray(out).reshape(n, R, 2)
+if name == "hier_int8":
+    assert np.allclose(got, exp, rtol=0.02, atol=2.0), got - exp
+else:
+    assert np.array_equal(got, exp), got - exp
+print("OK")
+"""
+
+
+@pytest.mark.parametrize("name", TRANSPORTS)
+def test_alltoallv_ragged_splits(name):
+    assert "OK" in run_py(A2AV.format(name=name))
+
+
+# MoE scatter mode: the exchange is pure data movement, so swapping the
+# transport must not change a single bit of the output.
+MOE_SWAP = """
+import jax, jax.numpy as jnp, numpy as np
+from repro.launch.mesh import make_local_mesh
+from repro.models.moe import moe_ffn, moe_ffn_reference, moe_init
+key = jax.random.PRNGKey(2)
+B, T, D, F, E, k = 2, 8, 16, 32, 8, 2
+p = moe_init(key, D, F, E)
+x = jax.random.normal(key, (B, T, D), jnp.bfloat16)
+mesh = make_local_mesh(2, 4)
+y_ref, _ = moe_ffn_reference(p, x, top_k=k, num_experts=E)
+ys = {}
+for t in ("native", "tree", "serial", "hier", "hier_int8"):
+    y, aux = moe_ffn(p, x, top_k=k, num_experts=E,
+                     capacity_factor=float(E), mesh=mesh,
+                     batch_axes=("data",), mode="scatter", comm=t)
+    ys[t] = np.asarray(y, np.float32)
+    assert np.allclose(ys[t], np.asarray(y_ref, np.float32), atol=0.05), t
+for t, y in ys.items():
+    assert np.array_equal(y, ys["native"]), f"{t} not bitwise-stable"
+# replicated (decode) combine rides the same Communicator
+y1, _ = moe_ffn(p, x[:, :1], top_k=k, num_experts=E, capacity_factor=4.0,
+                mesh=mesh, batch_axes=("data",), mode="replicated",
+                comm="tree")
+y2, _ = moe_ffn(p, x[:, :1], top_k=k, num_experts=E, capacity_factor=4.0,
+                mesh=mesh, batch_axes=("data",), mode="replicated",
+                comm="native")
+assert np.allclose(np.asarray(y1, np.float32), np.asarray(y2, np.float32),
+                   atol=1e-3)
+print("OK")
+"""
+
+
+def test_moe_scatter_bitwise_stable_under_transport_swap():
+    assert "OK" in run_py(MOE_SWAP, ndev=8)
+
+
+def test_moe_has_no_direct_lax_all_to_all():
+    """Acceptance criterion: MoE dispatch goes through the Communicator,
+    never through raw XLA collectives."""
+    import inspect
+
+    from repro.models import moe
+
+    src = inspect.getsource(moe)
+    assert "lax.all_to_all(" not in src
+    assert "lax.psum(" not in src
+
+
+def test_commspec_carries_alltoall():
+    from repro.comms import CommSpec
+
+    assert CommSpec.from_flag("tree").alltoall == "tree"
+    assert CommSpec().alltoall == "native"
