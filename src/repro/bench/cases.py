@@ -1,18 +1,26 @@
 """The paper's benchmark matrix as registered cases.
 
     p2p            Fig 2/3   send/roundtrip size sweep + v5e link model
+    multipair      OMB-Py    k simultaneous p2p pairs, aggregate GB/s
+    bibw           OMB-Py    bidirectional sendrecv bandwidth
+    msgrate        OMB-Py    back-to-back small-message issue rate
+    overlap        Charm4Py  overlap fraction: compute + in-flight
+                             allreduce vs the sum of each alone
     agg            Fig 5     tree vs native aggregation, 2..8 ranks
     bcast          Fig 7     serial/tree/native broadcast + pod-scale model
     scatter        Fig 6     scatter (per-transport bcast schedule) and
                              gather-to-nonzero-root, tree vs native
-    grad_exchange  trainer   allreduce variants on the 2x2x2 pod mesh,
-                             with HLO link-byte accounting
+    grad_exchange  trainer   allreduce variants on the 2x2x2 pod mesh
+                             with HLO link-byte accounting, plus the
+                             train-step tie-in (blocking vs overlap
+                             microbatch pipeline, steps.py)
     stream         HPCC      STREAM triad local-bandwidth anchor
 
 Every measured case drives the public :class:`~repro.comms.Communicator`
-surface only (OMB-Py discipline).  jax is imported inside the bodies:
-this module's *metadata* must be importable in the parent process before
-any device initialization.
+surface only (OMB-Py discipline; the OMB-Py/Charm4Py-parity families
+mirror arXiv:2110.10659 / arXiv:2111.04872).  jax is imported inside the
+bodies: this module's *metadata* must be importable in the parent
+process before any device initialization.
 """
 from __future__ import annotations
 
@@ -78,6 +86,213 @@ def run_p2p(ctx: BenchContext):
         yield ctx.model_row(f"p2p_model_dci_{size}B", us=t_dci * 1e6,
                             ranks=2, size_bytes=size,
                             gbps=size / t_dci / 1e9)
+
+
+# ------------------------------------- OMB-Py parity: multipair / bibw /
+# msgrate (arXiv:2110.10659 §4: multi-pair bandwidth, bidirectional
+# bandwidth, message rate — dimensions the paper's Fig 2/3 single-pair
+# sweep does not cover)
+
+
+@register_case("multipair", figure="omb:multipair", ndev=8,
+               description="k simultaneous disjoint p2p pairs in one "
+                           "sendrecv round; aggregate GB/s")
+def run_multipair(ctx: BenchContext):
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from repro.comms import Communicator
+
+    n = max(ctx.ndev - ctx.ndev % 2, 2)
+    mesh = jax.make_mesh((n,), ("x",))
+    comm = Communicator(mesh)
+    spec = P("x")
+    for k in sorted({1, 2, n // 2}):
+        if k > n // 2:
+            continue
+        pairs = tuple((2 * i, 2 * i + 1) for i in range(k))
+        for size in ctx.profile.p2p_sizes:
+            x = jnp.zeros((n, max(size // 4, 1)), jnp.float32)
+
+            def body(v, ps=pairs):
+                out = comm.sendrecv(v, ps)
+                return out.reshape(1, -1).mean(1, keepdims=True)
+            f = jax.jit(comm.wrap(body, in_specs=(spec,), out_specs=spec))
+            st = ctx.measure(f, x)
+            yield ctx.row(f"multipair_k{k}_{size}B", ranks=n,
+                          size_bytes=size, stats=st,
+                          gbps=gbps(size * k, st["median_us"]),
+                          note=f"pairs={k} aggregate")
+
+
+@register_case("bibw", figure="omb:bibw", ndev=2,
+               description="bidirectional bandwidth: both directions of "
+                           "one pair in flight in the same round")
+def run_bibw(ctx: BenchContext):
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from repro.comms import Communicator
+
+    mesh = jax.make_mesh((2,), ("x",))
+    comm = Communicator(mesh)
+    spec = P("x")
+
+    def body(v):
+        out = comm.sendrecv(v, ((0, 1), (1, 0)))
+        return out.reshape(1, -1).mean(1, keepdims=True)
+
+    f = jax.jit(comm.wrap(body, in_specs=(spec,), out_specs=spec))
+    for size in ctx.profile.p2p_sizes:
+        x = jnp.zeros((2, max(size // 4, 1)), jnp.float32)
+        st = ctx.measure(f, x)
+        yield ctx.row(f"bibw_{size}B", ranks=2, size_bytes=size, stats=st,
+                      gbps=gbps(2 * size, st["median_us"]),
+                      note="2x payload in flight")
+
+
+@register_case("msgrate", figure="omb:msgrate", ndev=2,
+               description="back-to-back small-message issue rate: a "
+                           "chained window of sends per timed call")
+def run_msgrate(ctx: BenchContext):
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from repro.comms import Communicator
+
+    mesh = jax.make_mesh((2,), ("x",))
+    comm = Communicator(mesh)
+    spec = P("x")
+    window = ctx.profile.msgrate_window
+    size = ctx.profile.p2p_sizes[0]
+
+    def body(v):
+        # chained (+1 defeats CSE): each hop issues only after the
+        # previous returns — OMB-Py's back-to-back message discipline
+        for _ in range(window):
+            v = comm.send(v + 1.0, dst=1, src=0)
+        return v.reshape(1, -1).mean(1, keepdims=True)
+
+    f = jax.jit(comm.wrap(body, in_specs=(spec,), out_specs=spec))
+    x = jnp.zeros((2, max(size // 4, 1)), jnp.float32)
+    st = ctx.measure(f, x)
+    rate = window / (st["min_us"] * 1e-6)
+    yield ctx.row(f"msgrate_w{window}_{size}B", ranks=2, size_bytes=size,
+                  stats=st, note=f"msgs/s={rate:.0f} window={window}")
+
+
+# ------------------------------------------- Charm4Py parity: overlap
+
+
+@register_case("overlap", figure="charm4py:overlap", ndev=2,
+               description="overlap fraction per transport/size: an "
+                           "R-slot compute+allreduce pipeline, blocking "
+                           "vs double-buffered in one program")
+def run_overlap(ctx: BenchContext):
+    """Charm4Py's headline measurement (arXiv:2111.04872 §5.3): how much
+    collective time hides behind compute when the exchange is issued a
+    slot early.  Two jitted programs, each R = ``overlap_slots`` slots of
+    (matmul-chain compute, allreduce):
+
+      * ``blocking``   — slot i's allreduce operand depends on slot i's
+        compute output, so every exchange serializes after its compute;
+      * ``overlapped`` — the pipeline is double-buffered: slot i
+        exchanges the payload produced by slot i-1, which is ready at
+        slot entry, so XLA may schedule the collective alongside the
+        matmuls (rendezvous/dispatch hiding even without spare cores).
+
+    Same compute, same R collectives of the same size; the fraction
+
+        frac = (t_blocking - t_overlapped) / t_coll_only
+
+    (best-of-N, t_coll_only = R chained allreduces alone) is the share
+    of total collective time the restructuring recovers: 0 = none,
+    1 = fully hidden.  This is the microbenchmark form of the train
+    step's ``*_overlap`` grad-exchange pipeline (train/steps.py), and
+    the R-slot repetition keeps the timed region in the multi-ms range
+    where best-of-N is stable on an oversubscribed host.  Pair scale
+    (ndev=2) on purpose: overlap is a per-link property, and more
+    virtual ranks on one host only add rendezvous jitter."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from repro.comms import Communicator
+
+    n = ctx.ndev
+    mesh = jax.make_mesh((n,), ("x",))
+    spec = P("x")
+    d = ctx.profile.overlap_compute_dim
+    reps = ctx.profile.overlap_compute_iters
+    slots = max(ctx.profile.overlap_slots, 2)
+
+    def chain(z, w):
+        for _ in range(reps):
+            z = jnp.tanh(z @ w)
+        return z
+
+    z0 = jnp.ones((n, d, d), jnp.float32)
+    w0 = jnp.ones((d, d), jnp.float32) * 0.01
+    sizes = sorted(set(ctx.profile.overlap_sizes))
+    for tname in ("native", "tree", "hier"):
+        comm = Communicator(mesh, tname)
+
+        def coll_only(v):
+            # R chained exchanges (+1 defeats CSE): total collective time
+            for _ in range(slots):
+                v = comm.allreduce(v + 1.0) / n
+            return v.reshape(1, -1).mean(1, keepdims=True)
+
+        def blocking(v, z, w):
+            # slot i's payload derives from slot i's compute: the
+            # exchange cannot start until the matmul chain retires
+            acc = jnp.zeros((1, 1), jnp.float32)
+            for _ in range(slots):
+                z = chain(z, w)
+                payload = v + z[0, :1, :1]
+                acc = acc + comm.allreduce(payload).mean()
+            return acc / slots
+
+        def overlapped(v, z, w):
+            # double-buffered: slot i exchanges slot i-1's payload,
+            # ready at slot entry — same compute, same R collectives
+            acc = jnp.zeros((1, 1), jnp.float32)
+            z = chain(z, w)
+            pending = v + z[0, :1, :1]
+            for _ in range(slots - 1):
+                acc = acc + comm.allreduce(pending).mean()
+                z = chain(z, w)
+                pending = v + z[0, :1, :1]
+            acc = acc + comm.allreduce(pending).mean()   # drain
+            return acc / slots
+
+        for size in sizes:
+            x = jnp.ones((n, max(size // 4, 1)), jnp.float32)
+            f_coll = jax.jit(comm.wrap(coll_only, in_specs=(spec,),
+                                       out_specs=spec))
+            f_blk = jax.jit(comm.wrap(blocking, in_specs=(spec, spec, P()),
+                                      out_specs=P()))
+            f_ovl = jax.jit(comm.wrap(overlapped,
+                                      in_specs=(spec, spec, P()),
+                                      out_specs=P()))
+            from repro.bench.sampling import sample_paired, stats_us
+            st_coll = ctx.measure(f_coll, x)
+            # interleave blocking/overlapped samples so host drift hits
+            # both equally and the best-of-N difference stays meaningful
+            s_blk, s_ovl = sample_paired(
+                f_blk, (x, z0, w0), f_ovl, (x, z0, w0),
+                warmup=ctx.profile.warmup, iters=ctx.profile.iters)
+            st_blk, st_ovl = stats_us(s_blk), stats_us(s_ovl)
+            frac = ((st_blk["min_us"] - st_ovl["min_us"])
+                    / max(st_coll["min_us"], 1e-9))
+            yield ctx.row(
+                f"overlap_{tname}_{size}B", transport=tname, ranks=n,
+                size_bytes=size, stats=st_ovl,
+                note=f"frac={frac:.3f} blocking_us={st_blk['min_us']:.0f} "
+                     f"coll_us={st_coll['min_us']:.0f} slots={slots}")
 
 
 # ----------------------------------------------------------- agg / bcast
@@ -262,7 +477,8 @@ def run_alltoall(ctx: BenchContext):
 
 @register_case("grad_exchange", figure="trainer", ndev=8,
                description="gradient allreduce variants on the pod mesh "
-                           "with HLO link-byte accounting")
+                           "with HLO link-byte accounting, plus the "
+                           "blocking-vs-overlap train-step tie-in")
 def run_grad_exchange(ctx: BenchContext):
     import jax
     import jax.numpy as jnp
@@ -294,6 +510,54 @@ def run_grad_exchange(ctx: BenchContext):
             size_bytes=nbytes, stats=st,
             note=f"link={an.get('link_bytes', 0.0) / 2 ** 20:.2f}MiB "
                  f"dci={an.get('dci_link_bytes', 0.0) / 2 ** 20:.2f}MiB")
+
+    # --- train-step tie-in: the same exchange inside the real
+    # microbatched step (train/steps.py), blocking scan vs the
+    # one-slot-deep overlap pipeline — the row pair the `overlap`
+    # microbenchmark case predicts
+    from jax.sharding import NamedSharding
+
+    from repro.configs.base import ShapeSpec, get_config, reduced
+    from repro.launch.mesh import make_local_mesh
+    from repro.models.model import Model
+    from repro.optim.optimizer import OptimizerConfig, opt_init
+    from repro.train import steps as steps_lib
+
+    pr = ctx.profile
+    cfg = reduced(get_config("h2o-danube-1.8b"),
+                  microbatches=pr.gradex_step_mb)
+    shape = ShapeSpec("bench", "train", pr.gradex_step_seq,
+                      pr.gradex_step_batch)
+    tmesh = (make_local_mesh(2, 2, pod=2) if ctx.ndev >= 8
+             else make_local_mesh(ctx.ndev, 1))
+    model = Model(cfg, tmesh)
+    ocfg = OptimizerConfig()
+    bundle = steps_lib.sharding_bundle(model, ocfg, shape)
+    params = jax.jit(model.init,
+                     out_shardings=bundle["params"])(jax.random.PRNGKey(0))
+    opt = jax.jit(lambda p: opt_init(ocfg, p),
+                  out_shardings=bundle["opt"])(params)
+    toks = jax.random.randint(
+        jax.random.PRNGKey(1),
+        (pr.gradex_step_batch, pr.gradex_step_seq), 0, cfg.vocab_size)
+    batch = jax.device_put({"tokens": toks, "labels": toks},
+                           bundle["input_shardings"])
+    step0 = jnp.zeros((), jnp.int32)
+    gbytes = 4 * sum(p.size for p in jax.tree.leaves(params))
+    for mode in ("tree", "tree_overlap"):
+        step_fn, mbn = steps_lib.make_train_step(
+            model, ocfg, shape.global_batch, grad_comms=mode)
+        f = jax.jit(step_fn,
+                    in_shardings=(bundle["params"], bundle["opt"],
+                                  bundle["input_shardings"],
+                                  NamedSharding(tmesh, P())),
+                    out_shardings=(bundle["params"], bundle["opt"], None))
+        st = ctx.measure(f, params, opt, batch, step0)
+        label = "overlap" if mode.endswith("_overlap") else "blocking"
+        yield ctx.row(f"gradex_step_{label}_tree", transport="tree",
+                      ranks=ctx.ndev, size_bytes=gbytes, stats=st,
+                      note=f"mb={mbn} batch={pr.gradex_step_batch} "
+                           f"seq={pr.gradex_step_seq}")
 
 
 # -------------------------------------------------------------- stream

@@ -49,6 +49,16 @@ class Profile:
     moe_d_ff: int = 64                  # expert FFN width
     moe_experts: int = 4                # global expert count (>= ranks)
     moe_top_k: int = 2                  # experts per token
+    # OMB-Py / Charm4Py parity families (repro/bench/cases.py)
+    msgrate_window: int = 16            # back-to-back messages per call
+    overlap_sizes: Tuple[int, ...] = (1024, 4096)   # collective bytes
+    overlap_compute_dim: int = 48       # per-rank matmul dim (overlap case)
+    overlap_compute_iters: int = 2      # chained matmuls per slot
+    overlap_slots: int = 4              # pipeline depth (slots per call)
+    # grad_exchange train-step tie-in: overlap vs blocking full step
+    gradex_step_batch: int = 8          # global batch of the timed step
+    gradex_step_seq: int = 8            # sequence length
+    gradex_step_mb: int = 2             # microbatches (pipeline depth)
 
 
 PROFILES: Dict[str, Profile] = {
@@ -62,7 +72,13 @@ PROFILES: Dict[str, Profile] = {
                     serve_new_tokens=16, serve_slots=4,
                     serve_max_len=128, serve_rate=100.0,
                     moe_tokens=2048, moe_d_model=256, moe_d_ff=512,
-                    moe_experts=16, moe_top_k=2),
+                    moe_experts=16, moe_top_k=2,
+                    msgrate_window=64,
+                    overlap_sizes=(64 * 1024, 1024 * 1024),
+                    overlap_compute_dim=128, overlap_compute_iters=8,
+                    overlap_slots=16,
+                    gradex_step_batch=32, gradex_step_seq=32,
+                    gradex_step_mb=4),
     "ci": Profile("ci", warmup=2, iters=7,
                   p2p_sizes=(16, 1024, 64 * 1024, 1024 * 1024),
                   coll_sizes=(8, 8 * 1024, 256 * 1024),
@@ -73,7 +89,13 @@ PROFILES: Dict[str, Profile] = {
                   serve_new_tokens=8, serve_slots=3,
                   serve_max_len=64, serve_rate=200.0,
                   moe_tokens=512, moe_d_model=128, moe_d_ff=256,
-                  moe_experts=8, moe_top_k=2),
+                  moe_experts=8, moe_top_k=2,
+                  msgrate_window=32,
+                  overlap_sizes=(8 * 1024, 64 * 1024),
+                  overlap_compute_dim=64, overlap_compute_iters=4,
+                  overlap_slots=16,
+                  gradex_step_batch=16, gradex_step_seq=16,
+                  gradex_step_mb=4),
     "tiny": Profile("tiny", warmup=1, iters=2,
                     p2p_sizes=(16, 256),
                     coll_sizes=(8, 1024),
@@ -82,7 +104,12 @@ PROFILES: Dict[str, Profile] = {
                     gradex_bytes=4096, modeled=True,
                     serve_requests=3, serve_prompt_len=8,
                     serve_new_tokens=3, serve_slots=2,
-                    serve_max_len=32, serve_rate=1e6),
+                    serve_max_len=32, serve_rate=1e6,
+                    msgrate_window=8, overlap_sizes=(1024, 4096),
+                    overlap_compute_dim=48, overlap_compute_iters=2,
+                    overlap_slots=4,
+                    gradex_step_batch=8, gradex_step_seq=8,
+                    gradex_step_mb=2),
 }
 
 

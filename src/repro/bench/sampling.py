@@ -24,6 +24,29 @@ def sample(fn: Callable, *args, warmup: int = 2, iters: int = 5
     return out
 
 
+def sample_paired(fn_a, args_a, fn_b, args_b, *, warmup: int = 2,
+                  iters: int = 5):
+    """Interleaved A/B timing: alternate single calls of ``a`` and ``b``
+    so slow host drift (thermal, co-tenant load) biases both samples
+    equally — best-of-N differences stay meaningful where back-to-back
+    blocks would not.  Returns ``(samples_a, samples_b)`` in seconds."""
+    import jax
+
+    for _ in range(max(warmup, 0)):
+        jax.block_until_ready(fn_a(*args_a))
+        jax.block_until_ready(fn_b(*args_b))
+    sa: List[float] = []
+    sb: List[float] = []
+    for _ in range(max(iters, 1)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn_a(*args_a))
+        sa.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn_b(*args_b))
+        sb.append(time.perf_counter() - t0)
+    return sa, sb
+
+
 def _quantile(sorted_s: Sequence[float], q: float) -> float:
     """Nearest-rank quantile of an already-sorted sample."""
     idx = min(len(sorted_s) - 1, max(0, math.ceil(q * len(sorted_s)) - 1))

@@ -37,7 +37,14 @@ _OPS = ("allreduce", "bcast", "agg", "reduce_scatter", "allgather",
 
 @dataclasses.dataclass(frozen=True)
 class CommSpec:
-    """Per-op transport selection (names from the transport registry)."""
+    """Per-op transport selection (names from the transport registry).
+
+    ``overlap`` is a scheduling hint, not a transport: consumers that can
+    pipeline (the train-step gradient exchange) issue each collective one
+    slot *behind* the compute that produced its operand, so the exchange
+    of slot *i* is in flight while slot *i+1* computes.  Transports are
+    oblivious — the same algorithms run either way.
+    """
 
     allreduce: str = "native"
     bcast: str = "native"
@@ -46,16 +53,21 @@ class CommSpec:
     allgather: str = "native"
     scatter: str = "native"
     alltoall: str = "native"            # also drives alltoallv
+    overlap: bool = False               # pipeline collectives behind compute
 
     @classmethod
     def from_flag(cls, flag: str) -> "CommSpec":
         """Map a CLI-style algorithm flag (--grad-comms) to a spec.
-        'auto' (GSPMD, no explicit comms) must be handled by the caller
-        *before* building a Communicator."""
+        A ``_overlap`` suffix (``tree_overlap``, ``hier_overlap``, ...)
+        selects the same transport with ``overlap=True``.  'auto' (GSPMD,
+        no explicit comms) must be handled by the caller *before*
+        building a Communicator."""
         if flag == "auto":
             raise ValueError("grad_comms='auto' means GSPMD handles the "
                              "exchange; no Communicator is involved")
-        return cls(**{op: flag for op in _OPS})
+        overlap = flag.endswith("_overlap")
+        base = flag[:-len("_overlap")] if overlap else flag
+        return cls(**{op: base for op in _OPS}, overlap=overlap)
 
 
 def _as_spec(spec: Union[str, CommSpec, None]) -> CommSpec:

@@ -19,11 +19,13 @@ def main() -> None:
     ap.add_argument("--shape", default="train_4k")
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--ckpt", default="/tmp/repro_ckpt")
+    from repro.train.steps import GRAD_COMMS_MODES
     ap.add_argument("--grad-comms", default="auto",
-                    choices=("auto", "native", "tree", "serial", "hier",
-                             "hier_int8"),
+                    choices=GRAD_COMMS_MODES,
                     help="'auto' = GSPMD; otherwise the transport a "
-                         "CommSpec binds to the batch-axis Communicator")
+                         "CommSpec binds to the batch-axis Communicator; "
+                         "'<transport>_overlap' double-buffers the "
+                         "exchange behind the next microbatch's compute")
     ap.add_argument("--moe-comms", default="",
                     choices=("", "native", "tree", "serial", "hier",
                              "hier_int8"),

@@ -157,10 +157,15 @@ def opt_init(cfg: OptimizerConfig, params):
 
 
 def opt_update(cfg: OptimizerConfig, grads, state, params, step: Array):
+    """Returns (new_params, new_state, lr) — the schedule value is
+    surfaced so train-step metrics report the lr actually applied."""
     lr = warmup_cosine(cfg, step)
     if cfg.name == "adafactor":
-        return adafactor_update(cfg, grads, state, params, lr)
-    return adamw_update(cfg, grads, state, params, lr)
+        new_params, new_state = adafactor_update(cfg, grads, state, params,
+                                                 lr)
+    else:
+        new_params, new_state = adamw_update(cfg, grads, state, params, lr)
+    return new_params, new_state, lr
 
 
 def opt_pspecs(cfg: OptimizerConfig, param_pspecs, abstract_params):

@@ -1,11 +1,25 @@
 """jit-able step functions: train (with microbatch gradient accumulation),
 prefill and decode.  These are what the launcher jits and the dry-run
 lowers; the Trainer loop wraps them with checkpointing/fault handling.
+
+The data-parallel gradient exchange comes in three shapes (selected by
+``grad_comms``, see :func:`make_train_step`):
+
+* ``auto`` — GSPMD inserts flat all-reduces (the mpi4py analogue);
+* explicit *blocking* — each microbatch's gradients are all-reduced
+  through a mesh-bound Communicator inside the accumulation scan, in
+  per-layer-group buckets;
+* explicit *overlap* (``<transport>_overlap``) — a one-slot-deep
+  double-buffered pipeline (mirroring the serve engine's one-tick
+  overlap): the exchange of microbatch *i*'s buckets is issued at the
+  top of iteration *i+1*, before that microbatch's forward/backward —
+  no data dependence links them, so XLA is free to run the in-flight
+  collective behind the compute.
 """
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict
+from typing import Any, Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -17,6 +31,12 @@ from repro.models import partition
 from repro.models.model import Model
 from repro.optim.optimizer import (OptimizerConfig, clip_by_global_norm,
                                    opt_init, opt_pspecs, opt_update)
+
+#: every accepted --grad-comms flag: GSPMD, the five explicit transports,
+#: and their double-buffered overlap variants
+GRAD_COMMS_MODES = ("auto", "native", "tree", "serial", "hier", "hier_int8",
+                    "native_overlap", "tree_overlap", "serial_overlap",
+                    "hier_overlap", "hier_int8_overlap")
 
 
 def effective_microbatches(cfg: ArchConfig, global_batch: int,
@@ -35,6 +55,41 @@ def effective_microbatches(cfg: ArchConfig, global_batch: int,
     return mb
 
 
+def grad_bucket_indices(tree) -> List[List[int]]:
+    """Partition a gradient tree's flat leaves into per-layer-group
+    buckets: leaves sharing their first two path entries (e.g.
+    ``('blocks', 3)``) form one bucket.  DDP-style bucketing — one
+    collective per group instead of one per leaf amortizes the scheduled
+    transports' per-round latency, and keeps buckets aligned with
+    backprop order so early buckets can be exchanged while later layers
+    are still differentiating."""
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    groups: Dict[Tuple[str, ...], List[int]] = {}
+    for i, (path, _) in enumerate(leaves):
+        groups.setdefault(tuple(str(p) for p in path[:2]), []).append(i)
+    return list(groups.values())
+
+
+def bucketed_allreduce(comm, tree):
+    """All-reduce a float32 gradient tree in per-layer-group buckets
+    (each bucket concatenated flat, one collective per bucket).  Buckets
+    are issued in reverse definition order — the deepest layers' grads
+    exit backprop first, so their exchange can launch while earlier
+    layers are still in the backward pass."""
+    (paths_and_leaves, treedef) = jax.tree_util.tree_flatten_with_path(tree)
+    leaves = [leaf for _, leaf in paths_and_leaves]
+    out: List[Any] = [None] * len(leaves)
+    for idxs in reversed(grad_bucket_indices(tree)):
+        vals = [leaves[i] for i in idxs]
+        buf = comm.allreduce(
+            jnp.concatenate([v.reshape(-1) for v in vals]))
+        off = 0
+        for i, v in zip(idxs, vals):
+            out[i] = lax.slice(buf, (off,), (off + v.size,)).reshape(v.shape)
+            off += v.size
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
 def make_train_step(model: Model, ocfg: OptimizerConfig,
                     global_batch: int, grad_comms: str = "auto"):
     """Returns train_step(params, opt_state, batch, step) ->
@@ -42,12 +97,18 @@ def make_train_step(model: Model, ocfg: OptimizerConfig,
 
     ``grad_comms`` selects the data-parallel gradient exchange:
       * ``auto``       — GSPMD inserts flat all-reduces (mpi4py analogue);
-      * anything else  — an explicit exchange through a mesh-bound
-        :class:`repro.comms.Communicator` over the batch axes, with the
-        algorithm chosen by ``CommSpec.from_flag``: ``tree`` (paper-
-        faithful two-level binary agg+bcast), ``hier``/``hier_int8``
-        (beyond-paper reduce-scatter hierarchy, optionally compressed),
-        ``native``/``serial`` for baselines.
+      * anything else  — an explicit bucketed exchange through a
+        mesh-bound :class:`repro.comms.Communicator` over the batch axes,
+        with the algorithm chosen by ``CommSpec.from_flag``: ``tree``
+        (paper-faithful two-level binary agg+bcast), ``hier``/
+        ``hier_int8`` (beyond-paper reduce-scatter hierarchy, optionally
+        compressed), ``native``/``serial`` for baselines.  A ``_overlap``
+        suffix (``tree_overlap``, ...) keeps the same transport but
+        pipelines it: microbatch *i*'s bucket exchange is issued before
+        microbatch *i+1*'s forward/backward (one-slot-deep double
+        buffering), and the last microbatch's exchange drains after the
+        scan.  All explicit modes issue ONE loss collective per step
+        (hoisted out of the scan), not one per microbatch.
     The explicit modes require non-FSDP params (replicated over the batch
     axes); FSDP archs keep 'auto' (their grads are sharded, and GSPMD's
     reduce-scatter is already the hierarchy).
@@ -63,52 +124,90 @@ def make_train_step(model: Model, ocfg: OptimizerConfig,
     def loss_fn(params, mbatch):
         return model.train_loss(params, mbatch)
 
+    def local_grad(params, mbatch):
+        (loss, _), g = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, mbatch)
+        return loss, jax.tree.map(lambda t: t.astype(jnp.float32), g)
+
+    def acc_tree(a, b):
+        return jax.tree.map(jnp.add, a, b)
+
     if explicit:
         from repro.comms import CommSpec, Communicator
+        spec = CommSpec.from_flag(grad_comms)
         baxes = partition.mesh_batch_axes(mesh, cfg)
-        comm = Communicator(mesh, CommSpec.from_flag(grad_comms),
-                            axes=baxes)
+        comm = Communicator(mesh, spec, axes=baxes)
+        overlap = spec.overlap and mb > 1
 
-        def local_grad(params, mbatch):
-            (loss, _), g = jax.value_and_grad(loss_fn, has_aux=True)(
-                params, mbatch)
-            g = comm.allreduce(
-                jax.tree.map(lambda t: t.astype(jnp.float32), g))
-            g = jax.tree.map(lambda t: t / comm.size, g)
-            loss = comm.allreduce(loss) / comm.size
-            return loss, g
+        def grad_pipeline(params, mbatches):
+            """Loss + globally-summed grads over all microbatches; runs
+            inside one shard_map so unreduced (per-rank) gradients can
+            live in the scan carry."""
+            def take(i):
+                return jax.tree.map(lambda x: x[i], mbatches)
 
-        batch_specs = {k: P(baxes, None) for k in ("tokens", "labels")}
+            if overlap:
+                # prime slot 0: compute its grads, defer their exchange
+                loss0, g0 = local_grad(params, take(0))
+
+                def mb_step(carry, mbatch):
+                    loss_acc, red_acc, pending = carry
+                    # exchange the PREVIOUS microbatch's buckets: no data
+                    # dependence on this microbatch's forward/backward,
+                    # so the collective runs behind the compute
+                    reduced = bucketed_allreduce(comm, pending)
+                    loss, g = local_grad(params, mbatch)
+                    return (loss_acc + loss,
+                            acc_tree(red_acc, reduced), g), ()
+
+                rest = jax.tree.map(lambda x: x[1:], mbatches)
+                zeros = jax.tree.map(jnp.zeros_like, g0)
+                (loss_sum, red_acc, pending), _ = lax.scan(
+                    mb_step, (loss0, zeros, g0), rest)
+                # drain: the last microbatch's exchange cannot hide
+                grads = acc_tree(red_acc, bucketed_allreduce(comm, pending))
+            else:
+                def mb_step(acc, mbatch):
+                    loss_acc, grad_acc = acc
+                    loss, g = local_grad(params, mbatch)
+                    return (loss_acc + loss,
+                            acc_tree(grad_acc, bucketed_allreduce(comm, g))
+                            ), ()
+
+                zeros = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params)
+                (loss_sum, grads), _ = lax.scan(
+                    mb_step, (0.0, zeros), mbatches)
+            # one loss collective per step, hoisted out of the scan
+            loss = comm.allreduce(loss_sum) / (mb * comm.size)
+            grads = jax.tree.map(lambda g: g / (mb * comm.size), grads)
+            return loss, grads
+
+        batch_specs = {k: P(None, baxes, None) for k in ("tokens", "labels")}
         # manual over the batch axes; model/TP axes stay automatic
-        grad_of = comm.wrap(local_grad, in_specs=(P(), batch_specs),
-                            out_specs=(P(), P()), manual_axes=comm.axes)
+        grad_all = comm.wrap(grad_pipeline, in_specs=(P(), batch_specs),
+                             out_specs=(P(), P()), manual_axes=comm.axes)
     else:
-        def grad_of(params, mbatch):
-            (loss, _), g = jax.value_and_grad(loss_fn, has_aux=True)(
-                params, mbatch)
-            return loss, g
+        def grad_all(params, mbatches):
+            def mb_step(acc, mbatch):
+                loss_acc, grad_acc = acc
+                loss, grads = local_grad(params, mbatch)
+                return (loss_acc + loss, acc_tree(grad_acc, grads)), ()
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss_sum, grads), _ = lax.scan(mb_step, (0.0, zeros), mbatches)
+            return loss_sum / mb, jax.tree.map(lambda g: g / mb, grads)
 
     def train_step(params, opt_state, batch, step):
         def reshape(x):
             return x.reshape((mb, x.shape[0] // mb) + x.shape[1:])
 
-        mbatches = jax.tree.map(reshape, batch)
-        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
-                             params)
-
-        def mb_step(acc, mbatch):
-            loss_acc, grad_acc = acc
-            loss, grads = grad_of(params, mbatch)
-            grad_acc = jax.tree.map(
-                lambda a, g: a + g.astype(jnp.float32), grad_acc, grads)
-            return (loss_acc + loss, grad_acc), ()
-
-        (loss_sum, grads), _ = lax.scan(mb_step, (0.0, zeros), mbatches)
-        grads = jax.tree.map(lambda g: g / mb, grads)
+        loss, grads = grad_all(params, jax.tree.map(reshape, batch))
         grads, gnorm = clip_by_global_norm(grads, ocfg.clip_norm)
-        params, opt_state = opt_update(ocfg, grads, opt_state, params, step)
-        metrics = {"loss": loss_sum / mb, "grad_norm": gnorm,
-                   "lr": jnp.zeros((), jnp.float32)}
+        params, opt_state, lr = opt_update(ocfg, grads, opt_state, params,
+                                           step)
+        metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr}
         return params, opt_state, metrics
 
     return train_step, mb

@@ -149,7 +149,8 @@ class Trainer:
                 want_early_ckpt = self.watchdog.observe(dt)
                 self.history.append(
                     {"step": step, "loss": float(metrics["loss"]),
-                     "grad_norm": float(metrics["grad_norm"]), "dt": dt})
+                     "grad_norm": float(metrics["grad_norm"]),
+                     "lr": float(metrics["lr"]), "dt": dt})
                 if step % tc.log_every == 0:
                     print(f"[trainer] step {step} loss="
                           f"{float(metrics['loss']):.4f} dt={dt*1e3:.0f}ms")

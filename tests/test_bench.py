@@ -37,14 +37,17 @@ def test_registry_roundtrip_tiny_two_devices():
     out = run_py(ROUNDTRIP, ndev=2)
     assert "OK" in out
     for case in ("p2p", "agg", "bcast", "scatter", "grad_exchange",
-                 "stream", "serving"):
+                 "stream", "serving", "multipair", "bibw", "msgrate",
+                 "overlap"):
         assert case in out
 
 
 def test_registry_metadata():
     cases = registry.all_cases()
     assert {c.name for c in cases} >= {"p2p", "agg", "bcast", "scatter",
-                                       "grad_exchange", "stream", "serving"}
+                                       "grad_exchange", "stream", "serving",
+                                       "multipair", "bibw", "msgrate",
+                                       "overlap"}
     for c in cases:
         assert c.ndev >= 1 and c.figure and c.description
     with pytest.raises(ValueError):
@@ -191,4 +194,24 @@ def test_committed_baseline_is_schema_valid():
     doc = results.load(path)
     cases = {r["case"] for r in doc["rows"]}
     assert {"p2p", "agg", "bcast", "scatter", "grad_exchange",
-            "stream", "serving"} <= cases
+            "stream", "serving", "multipair", "bibw", "msgrate",
+            "overlap"} <= cases
+    # acceptance tie-in: the baseline's overlap rows must show a positive
+    # recovered fraction on at least two transports, and the overlapped
+    # full train step must not be slower than blocking beyond the gate
+    fracs = {}
+    for r in doc["rows"]:
+        if r["case"] == "overlap":
+            f = float(r["note"].split()[0].split("=")[1])
+            fracs.setdefault(r["transport"], []).append(f)
+    pos = [t for t, fs in fracs.items() if any(f > 0 for f in fs)]
+    assert len(pos) >= 2, fracs
+    step = {r["name"]: r for r in doc["rows"]
+            if r["name"].startswith("gradex_step_")}
+    blk = step["gradex_step_blocking_tree"]["min_us"]
+    ovl = step["gradex_step_overlap_tree"]["min_us"]
+    # same criterion compare.py gates with: overlap counts as "no worse"
+    # unless it exceeds the relative threshold AND the noise floor
+    rel = (ovl - blk) / max(blk, 1e-9)
+    assert rel <= compare.DEFAULT_THRESHOLD or \
+        (ovl - blk) <= compare.DEFAULT_NOISE_FLOOR_US, (ovl, blk)

@@ -41,7 +41,9 @@ def test_adafactor_decreases_loss():
     start = float(loss(w))
     for step in range(20):
         g = jax.grad(loss)(w)
-        w, state = opt_update(cfg, g, state, w, jnp.asarray(step))
+        w, state, lr = opt_update(cfg, g, state, w, jnp.asarray(step))
+        # warmup_steps=0: cosine starts at peak, barely decayed by step 20
+        assert abs(float(lr) - cfg.peak_lr) < 1e-4 * cfg.peak_lr
     assert float(loss(w)) < start / 3
 
 

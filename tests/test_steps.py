@@ -1,0 +1,61 @@
+"""Unit tests for train-step helpers: microbatch sizing under assorted
+mesh shapes and DDP-style gradient bucketing."""
+import jax.numpy as jnp
+
+from tests._subproc import run_py
+
+
+def test_grad_bucket_indices_partition_leaves():
+    """Buckets group by the first two tree-path entries and partition the
+    flat leaf index set exactly."""
+    from repro.train.steps import grad_bucket_indices
+
+    tree = {
+        "blocks": {"0": {"w": jnp.ones(2), "b": jnp.ones(1)},
+                   "1": {"w": jnp.ones(3)}},
+        "emb": {"table": jnp.ones(4)},
+    }
+    buckets = grad_bucket_indices(tree)
+    flat_count = 4
+    seen = sorted(i for b in buckets for i in b)
+    assert seen == list(range(flat_count))           # exact partition
+    # ('blocks','0') leaves share a bucket; ('blocks','1') and ('emb',*)
+    # land elsewhere — 3 groups total
+    assert len(buckets) == 3
+    assert sorted(len(b) for b in buckets) == [1, 1, 2]
+
+
+def test_effective_microbatches_edge_cases():
+    code = """
+import dataclasses
+from repro.configs.base import get_config, reduced
+from repro.launch.mesh import make_local_mesh
+from repro.train.steps import effective_microbatches
+
+cfg = reduced(get_config("h2o-danube-1.8b"), microbatches=4)
+
+# single batch axis: (data=4, model=2) -> bprod=4
+mesh = make_local_mesh(4, 2)
+assert effective_microbatches(cfg, 16, mesh) == 4   # clean division
+assert effective_microbatches(cfg, 64, mesh) == 4   # capped by cfg
+# non-divisible global batch: 12/4 microbatches of 3 don't divide 4
+# ranks, but 12/3 microbatches of 4 do
+assert effective_microbatches(cfg, 12, mesh) == 3
+# prime global batch: nothing divides, forced down to 1
+assert effective_microbatches(cfg, 13, mesh) == 1
+# global batch == rank count: one sample per rank, mb forced to 1
+assert effective_microbatches(cfg, 4, mesh) == 1
+# global batch below rank count: still clamps to 1 (never 0)
+assert effective_microbatches(cfg, 2, mesh) == 1
+
+# multi-axis batch mesh: (pod=2, data=2, model=2) -> bprod=4
+mesh3 = make_local_mesh(2, 2, pod=2)
+assert effective_microbatches(cfg, 16, mesh3) == 4
+assert effective_microbatches(cfg, 8, mesh3) == 2
+
+# 'replicate' strategy hands the model axis to the batch too: bprod=8
+cfg_rep = dataclasses.replace(cfg, shard_strategy="replicate")
+assert effective_microbatches(cfg_rep, 16, mesh3) == 2
+print("OK")
+"""
+    assert "OK" in run_py(code, ndev=8, timeout=560)
