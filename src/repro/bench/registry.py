@@ -59,6 +59,9 @@ class Profile:
     gradex_step_batch: int = 8          # global batch of the timed step
     gradex_step_seq: int = 8            # sequence length
     gradex_step_mb: int = 2             # microbatches (pipeline depth)
+    # elastic families (repro/bench/elastic.py)
+    redist_shape: Tuple[int, int] = (256, 64)   # global Dmat extent
+    recovery_steps: int = 6             # supervised run length (steps)
 
 
 PROFILES: Dict[str, Profile] = {
@@ -78,7 +81,8 @@ PROFILES: Dict[str, Profile] = {
                     overlap_compute_dim=128, overlap_compute_iters=8,
                     overlap_slots=16,
                     gradex_step_batch=32, gradex_step_seq=32,
-                    gradex_step_mb=4),
+                    gradex_step_mb=4,
+                    redist_shape=(1024, 256), recovery_steps=8),
     "ci": Profile("ci", warmup=2, iters=7,
                   p2p_sizes=(16, 1024, 64 * 1024, 1024 * 1024),
                   coll_sizes=(8, 8 * 1024, 256 * 1024),
@@ -95,7 +99,8 @@ PROFILES: Dict[str, Profile] = {
                   overlap_compute_dim=64, overlap_compute_iters=4,
                   overlap_slots=16,
                   gradex_step_batch=16, gradex_step_seq=16,
-                  gradex_step_mb=4),
+                  gradex_step_mb=4,
+                  redist_shape=(256, 64), recovery_steps=6),
     "tiny": Profile("tiny", warmup=1, iters=2,
                     p2p_sizes=(16, 256),
                     coll_sizes=(8, 1024),
@@ -109,7 +114,8 @@ PROFILES: Dict[str, Profile] = {
                     overlap_compute_dim=48, overlap_compute_iters=2,
                     overlap_slots=4,
                     gradex_step_batch=8, gradex_step_seq=8,
-                    gradex_step_mb=2),
+                    gradex_step_mb=2,
+                    redist_shape=(32, 16), recovery_steps=4),
 }
 
 
@@ -159,7 +165,7 @@ def register_case(name: str, *, figure: str, ndev: int,
 
 def _ensure_loaded() -> None:
     # cases self-register on import; keep registry importable without them
-    from repro.bench import cases, serving  # noqa: F401
+    from repro.bench import cases, elastic, serving  # noqa: F401
 
 
 def all_cases() -> Tuple[BenchCase, ...]:

@@ -107,17 +107,45 @@ def all_steps(ckpt_dir: str):
     return out
 
 
+def _is_complete(step_dir: str) -> bool:
+    """A step dir restore() would actually succeed on: parseable
+    manifest and every declared leaf file present and non-empty.  The
+    atomic-rename commit makes torn writes unlikely, but disk-full
+    truncation or a crashed copy of a checkpoint tree can still leave a
+    directory that LOOKS committed — failover must skip it, not die."""
+    try:
+        with open(os.path.join(step_dir, "manifest.json")) as f:
+            manifest = json.load(f)
+        n = int(manifest["n_leaves"])
+    except (OSError, ValueError, KeyError):
+        return False
+    for i in range(n):
+        p = os.path.join(step_dir, f"leaf_{i}.npy")
+        try:
+            if os.path.getsize(p) == 0:
+                return False
+        except OSError:
+            return False
+    return True
+
+
 def latest_step(ckpt_dir: str) -> Optional[int]:
+    """Newest COMPLETE step: the LATEST pointer is trusted first, but a
+    missing/corrupt target falls back to the newest step dir that
+    passes the completeness check (see ``_is_complete``)."""
+    candidates = sorted(all_steps(ckpt_dir), reverse=True)
     path = os.path.join(ckpt_dir, "LATEST")
-    if not os.path.exists(path):
-        steps = all_steps(ckpt_dir)
-        return max(steps) if steps else None
-    with open(path) as f:
-        s = int(f.read().strip())
-    if not os.path.isdir(os.path.join(ckpt_dir, f"step_{s:08d}")):
-        steps = [x for x in all_steps(ckpt_dir) if x != s]
-        return max(steps) if steps else None
-    return s
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                s = int(f.read().strip())
+            candidates = [s] + [x for x in candidates if x != s]
+        except ValueError:
+            pass
+    for s in candidates:
+        if _is_complete(os.path.join(ckpt_dir, f"step_{s:08d}")):
+            return s
+    return None
 
 
 def restore(ckpt_dir: str, step: int, like_tree, shardings=None):

@@ -4,20 +4,25 @@ communication library could be substituted for PythonMPI".
 Public surface:
   * :class:`Communicator` — mesh-bound object exposing the full
     PythonMPI surface (send/recv/barrier/bcast/agg/allreduce/
-    reduce_scatter/allgather) plus the ``run``/``wrap`` jit-level entry.
+    reduce_scatter/allgather/alltoall(v)/redistribute) plus the
+    ``run``/``wrap`` jit-level entry.
   * :class:`CommSpec` — per-op algorithm selection.
   * :class:`Topology` — the (pod, in_axes) hierarchy, derived from a
     mesh in exactly one place.
   * transport registry — ``register_transport`` / ``get_transport`` /
     ``available_transports`` (native, tree, serial, hier, hier_int8).
-
-``repro.comms.backend.for_name`` remains as a deprecated shim for one
-release.
+  * fault injection — :class:`FaultPlan` / :class:`HostEvent` and the
+    ``faults.arm``/``armed`` switches; Communicators built while a plan
+    is armed wrap every transport in deterministic chaos (see
+    ``repro.comms.faults``).
 """
+from repro.comms import faults
 from repro.comms.communicator import CommSpec, Communicator
+from repro.comms.faults import FaultPlan, HostEvent
 from repro.comms.topology import Topology
 from repro.comms.transports import (Transport, available_transports,
                                     get_transport, register_transport)
 
 __all__ = ["Communicator", "CommSpec", "Topology", "Transport",
-           "available_transports", "get_transport", "register_transport"]
+           "available_transports", "get_transport", "register_transport",
+           "FaultPlan", "HostEvent", "faults"]

@@ -19,13 +19,14 @@ pytree-aware.  See repro/comms/README.md for the paper-function mapping.
 from __future__ import annotations
 
 import dataclasses
+from math import prod
 from typing import Any, Callable, Dict, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.comms import compat
+from repro.comms import compat, faults
 from repro.comms.topology import Topology
 from repro.comms.transports import Transport, get_transport
 
@@ -93,8 +94,14 @@ class Communicator:
         self.mesh = mesh
         self.spec = _as_spec(spec)
         self.topo = Topology.from_mesh(mesh, axes=axes)
+        # the armed FaultPlan (if any) is captured at construction:
+        # maybe_wrap is the identity when chaos is disarmed, so the
+        # common path carries zero wrapper overhead
+        self.fault_plan = faults.active_plan()
         self._t: Dict[str, Transport] = {
-            op: get_transport(getattr(self.spec, op), self.topo)
+            op: faults.maybe_wrap(
+                get_transport(getattr(self.spec, op), self.topo),
+                self.fault_plan)
             for op in _OPS}
         self._sync_fn = None
 
@@ -200,6 +207,53 @@ class Communicator:
         return jax.tree.map(
             lambda v: self._t["alltoall"].alltoallv(v, counts), x)
 
+    def redistribute(self, x: Any, src_map, dst_map,
+                     shape: Sequence[int]) -> Any:
+        """Streamed PGAS redistribution (in-shard_map): move this rank's
+        padded local block of a distributed array from ``src_map``'s
+        layout to ``dst_map``'s in ONE scheduled Alltoallv — the
+        capability pMatlab/pPython name as the library's core, with no
+        global materialization and no checkpoint round-trip.
+
+        Each leaf is this rank's OLD block (shape ``(1, *old_pad)`` as
+        shard_map presents Dmat storage, or ``old_pad`` bare); the
+        result is this rank's NEW block in the same convention.  The
+        (counts, send, recv) plan is static numpy computed once per
+        (maps, shape) — see :func:`repro.core.dmap.redistribution_plan`;
+        the wire exchange runs over the ``spec.alltoall`` transport, so
+        tree/serial/hier schedules (and chaos fault injection) apply
+        unchanged."""
+        from repro.core import dmap as dmap_lib
+        shape = tuple(int(s) for s in shape)
+        counts, send_idx, recv_idx = dmap_lib.redistribution_plan(
+            src_map, dst_map, shape, self.size)
+        old_size = int(prod(src_map.local_shape(shape)))
+        dst_pad = dst_map.local_shape(shape)
+        new_size = int(prod(dst_pad))
+        me = self.topo.rank()
+        sidx = jnp.take(jnp.asarray(send_idx), me, axis=0)
+        ridx = jnp.take(jnp.asarray(recv_idx), me, axis=0)
+
+        def leaf(v):
+            lead = v.ndim == len(shape) + 1 and v.shape[0] == 1
+            flat = v.reshape(-1)
+            if flat.shape[0] != old_size:
+                raise ValueError(
+                    f"leaf holds {flat.shape[0]} elements; src_map's "
+                    f"padded local block is {old_size}")
+            payload = jnp.take(flat, jnp.clip(sidx, 0, old_size - 1),
+                               axis=0)[:, None]
+            rows = self._t["alltoall"].alltoallv(
+                payload, counts)[:, 0]
+            # scatter source-ordered rows to their cells; -1 padding
+            # rows land in a sacrificial slot past the block
+            buf = jnp.zeros((new_size + 1,), v.dtype)
+            buf = buf.at[jnp.where(ridx >= 0, ridx, new_size)].set(
+                rows.astype(v.dtype))
+            out = buf[:new_size].reshape(dst_pad)
+            return out[None] if lead else out
+        return jax.tree.map(leaf, x)
+
     # ------------------------------------------------------- jit-level entry
     def wrap(self, fn: Callable, *, in_specs=None, out_specs=None,
              manual_axes: Optional[Sequence[str]] = None) -> Callable:
@@ -277,7 +331,8 @@ class Communicator:
                  axes: Optional[Sequence[str]] = None) -> "Communicator":
         """Memoized constructor — hot paths (Dmat ops) share one
         Communicator (and its jitted sync) per (mesh, spec, axes)."""
-        key = (mesh, _as_spec(spec), None if axes is None else tuple(axes))
+        key = (mesh, _as_spec(spec), None if axes is None else tuple(axes),
+               faults.active_plan())
         comm = cls._CACHE.get(key)
         if comm is None:
             comm = cls._CACHE[key] = cls(mesh, spec, axes)

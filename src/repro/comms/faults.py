@@ -1,0 +1,293 @@
+"""Deterministic fault injection for the comms layer.
+
+pPython targets commodity clusters where delayed, dropped, and corrupted
+messages — and outright node loss — are operating conditions, not
+exceptions.  This module makes those conditions *reproducible*: a
+:class:`FaultPlan` is a seeded schedule of
+
+  * op-level faults, applied by :class:`ChaosTransport` (a wrapper
+    around any registered transport) at trace time — injected message
+    delays, drops that force a retry, and payload bit-flips that fail
+    the (modeled) integrity check and are retransmitted, each retry
+    paying an exponential-backoff penalty; and
+  * host-level events (simulated device loss / capacity restore),
+    consumed by the training loop between steps (see
+    ``repro.train.recovery``).
+
+The schedule is a pure function of ``(seed, op label, op sequence
+number)`` via crc32, so two processes arming the same plan inject the
+same faults in the same places — which is what lets the chaos test
+assert that a faulted run reproduces the fault-free loss trajectory.
+
+Faults are decided at *trace* time and unrolled into the compiled
+program: the retried exchanges are real scheduled collectives (kept
+alive through ``lax.optimization_barrier`` so XLA cannot elide the
+wasted work) and the delays are real dependent compute.  Detection is
+modeled — the injector knows which attempt it broke — but the recovery
+semantics (retry, exponential backoff, value-exactness of the final
+attempt) are the production path.
+
+Arming is process-global and captured by each ``Communicator`` at
+construction: ``maybe_wrap`` returns the transport *unchanged* when no
+plan is armed (or the plan carries no op faults), so the disarmed path
+has literally zero overhead.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import zlib
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.comms.transports import Transport
+
+Array = jax.Array
+
+LOSE = "lose"
+RESTORE = "restore"
+
+
+@dataclasses.dataclass(frozen=True)
+class HostEvent:
+    """A device-population change at a training step boundary.
+
+    ``kind`` is ``"lose"`` (devices fail; the run must shrink and
+    restore from the last checkpoint — the failed devices' live state is
+    gone) or ``"restore"`` (capacity returns; the run may grow *live*,
+    redistributing the survivors' current state with no checkpoint
+    round-trip).  ``n_devices`` is the device count AFTER the event.
+    """
+
+    step: int
+    kind: str
+    n_devices: int
+
+    def __post_init__(self):
+        if self.kind not in (LOSE, RESTORE):
+            raise ValueError(f"kind must be {LOSE!r} or {RESTORE!r}, "
+                             f"got {self.kind!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """A seeded, deterministic schedule of injected faults.
+
+    Rates are per collective-op-per-leaf probabilities in [0, 1].  A
+    dropped or bit-flipped attempt is retried (up to ``max_attempts``
+    total tries) with an exponential backoff of ``backoff_iters * 2**k``
+    spin iterations before retry ``k``; an injected delay costs
+    ``delay_iters`` spin iterations.  ``events`` is the host-level
+    device-loss/restore schedule.
+    """
+
+    seed: int = 0
+    delay_rate: float = 0.0
+    drop_rate: float = 0.0
+    bitflip_rate: float = 0.0
+    max_attempts: int = 4
+    delay_iters: int = 256
+    backoff_iters: int = 64
+    events: Tuple[HostEvent, ...] = ()
+
+    def __post_init__(self):
+        for name in ("delay_rate", "drop_rate", "bitflip_rate"):
+            v = getattr(self, name)
+            if not 0.0 <= v <= 1.0:
+                raise ValueError(f"{name}={v} not in [0, 1]")
+        if self.max_attempts < 1:
+            raise ValueError("max_attempts must be >= 1")
+        object.__setattr__(self, "events",
+                           tuple(sorted(self.events, key=lambda e: e.step)))
+
+    # ------------------------------------------------------- op schedule
+    def _u(self, label: str, seq: int, salt: str) -> float:
+        """Uniform [0, 1) hash of (seed, label, seq, salt) — stable
+        across processes/runs (crc32, not Python's salted hash)."""
+        key = f"{self.seed}:{label}:{seq}:{salt}".encode()
+        return zlib.crc32(key) / 2 ** 32
+
+    def op_faults(self, label: str, seq: int) -> Tuple[bool, Tuple[str, ...]]:
+        """(delay?, failed-attempt kinds) for op number ``seq``."""
+        delay = self._u(label, seq, "delay") < self.delay_rate
+        failures: List[str] = []
+        if self._u(label, seq, "drop") < self.drop_rate:
+            failures.append("drop")
+        if self._u(label, seq, "flip") < self.bitflip_rate:
+            failures.append("bitflip")
+        return delay, tuple(failures[: self.max_attempts - 1])
+
+    @property
+    def has_op_faults(self) -> bool:
+        return (self.delay_rate > 0 or self.drop_rate > 0
+                or self.bitflip_rate > 0)
+
+
+# ---------------------------------------------------------------------------
+# process-global arming
+# ---------------------------------------------------------------------------
+
+_STATE = {"plan": None, "seq": 0, "log": [], "consumed": set()}
+
+
+def arm(plan: FaultPlan) -> None:
+    """Arm ``plan`` process-wide.  Communicators built while armed wrap
+    their transports; the trainer consults ``host_event`` each step."""
+    _STATE["plan"] = plan
+    _STATE["seq"] = 0
+    _STATE["log"] = []
+    _STATE["consumed"] = set()
+
+
+def disarm() -> None:
+    _STATE["plan"] = None
+
+
+def active_plan() -> Optional[FaultPlan]:
+    return _STATE["plan"]
+
+
+@contextlib.contextmanager
+def armed(plan: FaultPlan):
+    arm(plan)
+    try:
+        yield plan
+    finally:
+        disarm()
+
+
+def injection_log() -> Tuple[dict, ...]:
+    """What the armed plan has injected so far (host-side record,
+    appended at trace time): dicts of {op, seq, delay, failures}."""
+    return tuple(_STATE["log"])
+
+
+def host_event(step: int) -> Optional[HostEvent]:
+    """The unconsumed host event scheduled for ``step``, if any.  Events
+    are consumed explicitly (``consume``) so a post-recovery replay of
+    the same step numbers does not re-fire them."""
+    plan = _STATE["plan"]
+    if plan is None:
+        return None
+    for ev in plan.events:
+        if ev.step == step and (ev.step, ev.kind) not in _STATE["consumed"]:
+            return ev
+    return None
+
+
+def consume(ev: HostEvent) -> None:
+    _STATE["consumed"].add((ev.step, ev.kind))
+
+
+# ---------------------------------------------------------------------------
+# the chaos transport wrapper
+# ---------------------------------------------------------------------------
+
+
+def _spin(x: Array, iters: int) -> Array:
+    """Dependent busy-work: a chained transcendental loop seeded from
+    ``x`` whose result is tied back into ``x`` through an optimization
+    barrier, so XLA can neither start it early nor elide it — the
+    traced analogue of a link stall of ``iters`` ticks."""
+    if iters <= 0:
+        return x
+    seed = lax.convert_element_type(jnp.reshape(x, (-1,))[0], jnp.float32)
+    v = jnp.full((32,), 0.5, jnp.float32) + 1e-6 * seed
+
+    def body(_, a):
+        return jnp.sin(a) + 1e-6
+
+    v = lax.fori_loop(0, iters, body, v)
+    x, _ = lax.optimization_barrier((x, v))
+    return x
+
+
+def _corrupt(x: Array, kind: str, seq: int) -> Array:
+    """The payload of a failed attempt.  ``drop`` models a lost message
+    (the receiver sees zeros — nothing arrived before the timeout);
+    ``bitflip`` models wire corruption (one flipped mantissa bit in one
+    element, caught by the modeled integrity check)."""
+    if kind == "drop":
+        return jnp.zeros_like(x)
+    flat = x.reshape(-1)
+    i = seq % flat.shape[0]
+    if x.dtype == jnp.float32:
+        bits = lax.bitcast_convert_type(flat[i], jnp.int32)
+        bad = lax.bitcast_convert_type(bits ^ jnp.int32(1 << 12), jnp.float32)
+    else:  # non-f32 payloads: negate one element (still a detectable hit)
+        bad = -flat[i]
+    return flat.at[i].set(bad).reshape(x.shape)
+
+
+class ChaosTransport(Transport):
+    """Wrap any transport with the armed plan's op-level faults.
+
+    Every data op becomes: [optional delay] -> for each scheduled failed
+    attempt: run the op on a corrupted payload, discard the result (but
+    keep the work, ordered, via an optimization barrier), pay the
+    exponential backoff -> run the final, clean attempt.  The final
+    value is bit-exact with the unwrapped transport — what retries cost
+    is time, never correctness.
+    """
+
+    def __init__(self, inner: Transport, plan: FaultPlan):
+        self.inner = inner
+        self.plan = plan
+        self.topo = inner.topo
+        self.name = f"chaos({inner.name})"
+
+    # --------------------------------------------------------- machinery
+    def _chaos(self, label: str, x: Array, call) -> Array:
+        seq = _STATE["seq"]
+        _STATE["seq"] += 1
+        delay, failures = self.plan.op_faults(label, seq)
+        if delay or failures:
+            _STATE["log"].append({"op": label, "seq": seq, "delay": delay,
+                                  "failures": failures})
+        if delay:
+            x = _spin(x, self.plan.delay_iters)
+        for k, kind in enumerate(failures):
+            wasted = call(_corrupt(x, kind, seq))
+            x, _ = lax.optimization_barrier((x, wasted))
+            x = _spin(x, self.plan.backoff_iters << k)
+        return call(x)
+
+    # ------------------------------------------------------------- ops
+    def allreduce(self, x):
+        return self._chaos("allreduce", x, self.inner.allreduce)
+
+    def bcast(self, x, root: int = 0):
+        return self._chaos("bcast", x, lambda v: self.inner.bcast(v, root))
+
+    def agg(self, x, root: int = 0):
+        return self._chaos("agg", x, lambda v: self.inner.agg(v, root))
+
+    def allgather(self, x):
+        return self._chaos("allgather", x, self.inner.allgather)
+
+    def scatter(self, x, root: int = 0):
+        return self._chaos("scatter", x,
+                           lambda v: self.inner.scatter(v, root))
+
+    def reduce_scatter(self, x):
+        return self._chaos("reduce_scatter", x, self.inner.reduce_scatter)
+
+    def alltoall(self, x):
+        return self._chaos("alltoall", x, self.inner.alltoall)
+
+    def alltoallv(self, x, counts):
+        return self._chaos("alltoallv", x,
+                           lambda v: self.inner.alltoallv(v, counts))
+
+
+def maybe_wrap(transport: Transport,
+               plan: Optional[FaultPlan]) -> Transport:
+    """Wrap ``transport`` under ``plan``'s op faults; the disarmed (or
+    op-fault-free) path returns the transport object unchanged — zero
+    wrapper overhead unless chaos is actually requested."""
+    if plan is None or not plan.has_op_faults:
+        return transport
+    return ChaosTransport(transport, plan)

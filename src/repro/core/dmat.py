@@ -105,9 +105,32 @@ class Dmat:
         unlike ``to_global`` which leaves the gather to GSPMD."""
         return self._comm_gather("allgather")
 
-    def redistribute(self, new_map: Dmap) -> "Dmat":
-        """Remap between any two block-cyclic-overlapped maps: composed
-        static gather; XLA/GSPMD emits the communication."""
+    def redistribute(self, new_map: Dmap, *, method: str = "stream",
+                     comm=None) -> "Dmat":
+        """Remap between any two block-cyclic-overlapped maps.
+
+        ``method="stream"`` (default) moves only the bytes that change
+        owner, in one scheduled Alltoallv over the comm layer
+        (:meth:`Communicator.redistribute`) — no global materialization.
+        ``method="gather"`` is the original composed-static-gather path
+        where XLA/GSPMD emits the communication; kept as the reference
+        implementation and for meshes the caller wants GSPMD to handle.
+        ``comm`` overrides the memoized tree Communicator (e.g. to pick
+        a transport for the wire exchange)."""
+        if method == "stream":
+            comm = comm if comm is not None else self._comm()
+
+            def body(block):
+                return comm.redistribute(block, self.dmap, new_map,
+                                         self.shape)
+
+            storage = comm.run(body, self.storage,
+                               in_specs=(self._storage_spec(),),
+                               out_specs=self._storage_spec())
+            return Dmat(storage, new_map, self.shape, self.mesh)
+        if method != "gather":
+            raise ValueError(f"method must be 'stream' or 'gather', "
+                             f"got {method!r}")
         n = _ndev(self.mesh)
         # storage_new[r, l..] = global[g(r, l..)] = storage_old[owner(g)]
         idx_new, valid = new_map.storage_index_arrays(self.shape, n)

@@ -1,0 +1,103 @@
+"""Chaos harness: train under an armed FaultPlan and survive it.
+
+Runs the RecoverySupervisor with deterministic fault injection — op
+delays / retried drops / payload bit-flips on every collective, plus
+scheduled device loss (shrink remesh + checkpoint restore) and capacity
+restore (grow remesh + live state redistribution):
+
+    PYTHONPATH=src python -m repro.launch.chaos --arch h2o-danube-1.8b \
+        --reduced --steps 10 --devices 8 --model-width 4 \
+        --drop-rate 0.2 --delay-rate 0.2 --bitflip-rate 0.1 \
+        --lose 5:4 --restore 8:8
+
+The run's merged loss trajectory is printed step by step; with the same
+seed and no ``--lose/--restore/--*-rate`` flags you get the fault-free
+reference it must match (the chaos test automates exactly that
+comparison).
+"""
+import argparse
+import os
+
+
+def _event(spec: str, kind: str):
+    from repro.comms.faults import HostEvent
+    step, n = spec.split(":")
+    return HostEvent(int(step), kind, int(n))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true",
+                    help="reduced config (CPU-scale smoke)")
+    ap.add_argument("--steps", type=int, default=10)
+    ap.add_argument("--devices", type=int, default=8,
+                    help="virtual device count (forced before jax import)")
+    ap.add_argument("--model-width", type=int, default=4,
+                    help="TP width every remesh preserves")
+    ap.add_argument("--grad-comms", default="tree",
+                    help="explicit transport so op faults hit the "
+                         "gradient exchange ('auto' bypasses the "
+                         "Communicator entirely)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--delay-rate", type=float, default=0.0)
+    ap.add_argument("--drop-rate", type=float, default=0.0)
+    ap.add_argument("--bitflip-rate", type=float, default=0.0)
+    ap.add_argument("--lose", action="append", default=[],
+                    metavar="STEP:NDEV",
+                    help="kill devices before STEP, NDEV survive "
+                         "(repeatable)")
+    ap.add_argument("--restore", action="append", default=[],
+                    metavar="STEP:NDEV",
+                    help="restore capacity to NDEV before STEP "
+                         "(repeatable)")
+    ap.add_argument("--checkpoint-every", type=int, default=2)
+    ap.add_argument("--ckpt", default="/tmp/repro_chaos_ckpt")
+    args = ap.parse_args()
+
+    # the virtual device count must be pinned before jax initializes
+    os.environ.setdefault(
+        "XLA_FLAGS",
+        f"--xla_force_host_platform_device_count={args.devices}")
+
+    from repro.comms import faults
+    from repro.configs.base import SHAPES, ShapeSpec, get_config, reduced
+    from repro.train.recovery import RecoveryConfig, RecoverySupervisor
+    from repro.train.trainer import TrainerConfig
+
+    cfg = get_config(args.arch)
+    shape = SHAPES["train_4k"]
+    if args.reduced:
+        cfg = reduced(cfg)
+        shape = ShapeSpec("reduced", "train", 128, 8)
+
+    events = tuple(_event(s, faults.LOSE) for s in args.lose) + \
+        tuple(_event(s, faults.RESTORE) for s in args.restore)
+    plan = faults.FaultPlan(
+        seed=args.seed, delay_rate=args.delay_rate,
+        drop_rate=args.drop_rate, bitflip_rate=args.bitflip_rate,
+        events=events)
+
+    sup = RecoverySupervisor(
+        cfg, shape,
+        TrainerConfig(total_steps=args.steps,
+                      checkpoint_every=args.checkpoint_every,
+                      ckpt_dir=args.ckpt, grad_comms=args.grad_comms),
+        RecoveryConfig(model_width=args.model_width))
+    with faults.armed(plan):
+        out = sup.run()
+
+    print(f"[chaos] injected op faults: {len(faults.injection_log())}")
+    print(f"[chaos] recoveries: {out['recoveries']} "
+          f"(events: {out['events']})")
+    if out["detect_to_resume_s"]:
+        print("[chaos] detect-to-resume s: "
+              + ", ".join(f"{t:.2f}" for t in out["detect_to_resume_s"]))
+    print(f"[chaos] straggler flags: {out['flagged']}")
+    for h in out["history"]:
+        print(f"[chaos] step {h['step']} loss={h['loss']:.6f}")
+    print(f"[chaos] final loss {out['final_loss']}")
+
+
+if __name__ == "__main__":
+    main()

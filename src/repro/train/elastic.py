@@ -1,24 +1,33 @@
-"""Elastic re-meshing: continue training after losing hosts.
+"""Elastic re-meshing: continue training across device loss AND return.
 
 The recovery path for "node failure at 1000-chip scale" is:
-  1. the watchdog / runtime detects the loss and the job restarts on the
-     surviving device set;
-  2. ``shrink_mesh`` factors the survivors into the largest (data, model)
-     mesh that preserves the model-parallel width (TP width is a property
-     of the checkpoint math, data width is free);
+  1. the watchdog / fault plan / runtime detects the loss and the job
+     restarts on the surviving device set;
+  2. ``shrink_mesh`` factors the survivors into the largest
+     (data, model) mesh that preserves the model-parallel width (TP
+     width is a property of the checkpoint math, data width is free);
   3. the latest checkpoint is restored with the NEW mesh's shardings —
      redistribution between the old and new layouts is exactly a
      resharded load (and, in PGAS terms, a Dmap redistribute);
   4. the batch axes shrink, so ``effective_microbatches`` grows to keep
      the global batch (and thus the training trajectory) identical.
 
-On this CPU container the "failure" is simulated by rebuilding a smaller
-virtual mesh; the mechanism (shrink + resharded restore + microbatch
-rescale) is the production path.
+Scale-UP is the cheaper direction because nothing was lost: when
+capacity returns, ``grow_mesh`` factors the larger device set and
+``live_redistribute`` moves the survivors' CURRENT state onto the new
+mesh's shardings directly — no checkpoint round-trip.  (At the PGAS
+level the same capability is :meth:`Communicator.redistribute`, the
+streamed Alltoallv between two Dmaps; for trainer trees the shardings
+are GSPMD NamedShardings, so the resharded transfer is a device_put.)
+
+On this CPU container the "failure" is simulated by rebuilding a
+smaller virtual mesh (see ``repro.comms.faults.HostEvent``); the
+mechanism (shrink + resharded restore + microbatch rescale, grow +
+live redistribute) is the production path.
 """
 from __future__ import annotations
 
-from typing import Optional, Sequence, Tuple
+from typing import Any, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
@@ -27,16 +36,63 @@ from jax.sharding import Mesh
 from repro.checkpoint import checkpoint as ckpt_lib
 
 
-def shrink_mesh(n_devices: int, model_width: int,
-                devices: Optional[Sequence] = None) -> Mesh:
-    """Largest (data, model) mesh over ``n_devices`` surviving devices
-    that keeps the model axis width (required: checkpoint TP layout)."""
+class DeviceLossError(RuntimeError):
+    """Raised by the training loop when the armed fault plan kills
+    devices: the lost ranks' live state is gone, so the run must shrink
+    and restore from the last checkpoint (``n_devices`` = survivors)."""
+
+    def __init__(self, step: int, n_devices: int):
+        super().__init__(f"device loss at step {step}: "
+                         f"{n_devices} devices remain")
+        self.step = step
+        self.n_devices = n_devices
+
+
+class DeviceRestoreInterrupt(Exception):
+    """Raised by the training loop when capacity returns: nothing was
+    lost, so ``state`` carries the LIVE (params, opt) for the supervisor
+    to redistribute onto the grown mesh — no checkpoint round-trip."""
+
+    def __init__(self, step: int, n_devices: int, state: Tuple[Any, Any]):
+        super().__init__(f"capacity restored at step {step}: "
+                         f"grow to {n_devices} devices")
+        self.step = step
+        self.n_devices = n_devices
+        self.state = state
+
+
+def remesh(n_devices: int, model_width: int,
+           devices: Optional[Sequence] = None) -> Mesh:
+    """Largest (data, model) mesh over ``n_devices`` devices that keeps
+    the model axis width (required: checkpoint / live-state TP layout).
+    Both elastic directions factor through here."""
     devs = list(devices if devices is not None else jax.devices())[:n_devices]
     data = len(devs) // model_width
-    assert data >= 1, "not enough survivors for the TP width"
+    assert data >= 1, "not enough devices for the TP width"
     devs = devs[: data * model_width]
     arr = np.array(devs).reshape(data, model_width)
     return Mesh(arr, ("data", "model"))
+
+
+def shrink_mesh(n_devices: int, model_width: int,
+                devices: Optional[Sequence] = None) -> Mesh:
+    """Scale-down factoring over the survivors (see module docstring)."""
+    return remesh(n_devices, model_width, devices)
+
+
+def grow_mesh(n_devices: int, model_width: int,
+              devices: Optional[Sequence] = None) -> Mesh:
+    """Scale-up factoring when capacity returns — the same invariant
+    (model width preserved, data width free) from the other direction."""
+    return remesh(n_devices, model_width, devices)
+
+
+def live_redistribute(tree, shardings):
+    """Move live state onto a new mesh's shardings — resharded device
+    transfer, no checkpoint round-trip.  ``tree`` may hold device arrays
+    (old mesh) or host snapshots; ``shardings`` is a matching tree of
+    NamedShardings on the new mesh."""
+    return jax.tree.map(jax.device_put, tree, shardings)
 
 
 def remesh_restore(ckpt_dir: str, abstract_tree, new_shardings):

@@ -1,0 +1,143 @@
+"""RecoverySupervisor: the elastic training control loop.
+
+One object owns the whole "survive whatever the cluster does" story:
+
+  * it builds the mesh for the CURRENT device population (``remesh``,
+    model width preserved) and runs a :class:`Trainer` on it;
+  * :class:`~repro.train.elastic.DeviceLossError` (the armed
+    :class:`~repro.comms.faults.FaultPlan` killed devices) → shrink and
+    restore from the last checkpoint; the replayed steps recompute the
+    identical trajectory because the global batch is preserved
+    (``effective_microbatches`` rescales) and the data pipeline is
+    keyed by step;
+  * :class:`~repro.train.elastic.DeviceRestoreInterrupt` (capacity
+    returned) → snapshot the LIVE state off the interrupt, grow the
+    mesh, and hand the state to ``Trainer.run(state=...)`` which
+    redistributes it onto the new shardings — no checkpoint
+    round-trip;
+  * per-recovery **detect-to-resume** seconds are recorded (exception
+    caught → first step completed on the new mesh), and the straggler
+    watchdog's ``flagged`` counts are aggregated across incarnations.
+
+The supervisor is what ``launch/chaos.py`` drives and what the chaos
+test asserts against: a faulted run's merged history must match the
+fault-free run's loss trajectory step for step.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.optim.optimizer import OptimizerConfig
+from repro.train import elastic
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+@dataclasses.dataclass
+class RecoveryConfig:
+    """Knobs of the supervisor itself (the Trainer keeps its own)."""
+
+    model_width: int = 1          # TP width every remesh must preserve
+    max_recoveries: int = 8       # hard stop against event-loop bugs
+
+
+class RecoverySupervisor:
+    """Run training to completion across device loss/restore events."""
+
+    def __init__(self, cfg: ArchConfig, shape: ShapeSpec,
+                 tcfg: TrainerConfig, rcfg: Optional[RecoveryConfig] = None,
+                 ocfg: Optional[OptimizerConfig] = None,
+                 devices: Optional[Sequence] = None):
+        self.cfg, self.shape, self.tcfg = cfg, shape, tcfg
+        self.rcfg = rcfg or RecoveryConfig()
+        self.ocfg = ocfg
+        self.devices = list(devices if devices is not None
+                            else jax.devices())
+
+    def _trainer(self, n_devices: int) -> Trainer:
+        mesh = elastic.remesh(n_devices, self.rcfg.model_width,
+                              self.devices)
+        return Trainer(self.cfg, self.shape, mesh, self.tcfg, self.ocfg)
+
+    def run(self, n_devices: Optional[int] = None) -> Dict[str, Any]:
+        n = n_devices if n_devices is not None else len(self.devices)
+        state = None
+        start = 0
+        resume = True
+        history: Dict[int, dict] = {}
+        flagged = 0
+        events: List[dict] = []
+        detect_to_resume: List[float] = []
+        pending_detect: Optional[float] = None
+        summary: Dict[str, Any] = {}
+        for incarnation in range(self.rcfg.max_recoveries + 1):
+            trainer = self._trainer(n)
+            try:
+                summary = trainer.run(resume=resume, state=state,
+                                      start_step=start)
+                self._absorb(trainer, history, pending_detect,
+                             detect_to_resume)
+                flagged += trainer.watchdog.flagged
+                break
+            except elastic.DeviceLossError as e:
+                t_detect = time.time()
+                self._absorb(trainer, history, pending_detect,
+                             detect_to_resume)
+                flagged += trainer.watchdog.flagged
+                print(f"[recovery] {e} — shrinking to {e.n_devices} "
+                      f"devices, restoring last checkpoint")
+                events.append({"step": e.step, "kind": "lose",
+                               "n_devices": e.n_devices})
+                n = e.n_devices
+                # live state died with the devices: disk restore + replay
+                state, resume, start = None, True, 0
+                pending_detect = t_detect
+            except elastic.DeviceRestoreInterrupt as e:
+                t_detect = time.time()
+                self._absorb(trainer, history, pending_detect,
+                             detect_to_resume)
+                flagged += trainer.watchdog.flagged
+                print(f"[recovery] {e} — growing to {e.n_devices} "
+                      f"devices, live-redistributing state")
+                events.append({"step": e.step, "kind": "restore",
+                               "n_devices": e.n_devices})
+                n = e.n_devices
+                # snapshot the live state to host BEFORE the old mesh's
+                # arrays go out of scope; the next Trainer.run
+                # redistributes it onto the grown mesh's shardings
+                state = jax.device_get(e.state)
+                resume, start = False, e.step
+                pending_detect = t_detect
+        else:
+            raise RuntimeError(
+                f"gave up after {self.rcfg.max_recoveries} recoveries")
+        merged = [history[s] for s in sorted(history)]
+        summary = dict(summary)
+        summary.update({
+            "history": merged,
+            "flagged": flagged,
+            "straggler_flags": flagged,
+            "recoveries": len(events),
+            "events": events,
+            "detect_to_resume_s": detect_to_resume,
+            "n_devices_final": n,
+        })
+        return summary
+
+    @staticmethod
+    def _absorb(trainer: Trainer, history: Dict[int, dict],
+                pending_detect: Optional[float],
+                detect_to_resume: List[float]) -> None:
+        """Merge one incarnation's history (keyed by step — replayed
+        steps overwrite their pre-failure entries) and close out a
+        pending detect-to-resume measurement."""
+        for h in trainer.history:
+            history[h["step"]] = h
+        if pending_detect is not None \
+                and trainer.first_step_done_at is not None:
+            detect_to_resume.append(
+                trainer.first_step_done_at - pending_detect)

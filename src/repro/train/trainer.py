@@ -29,11 +29,12 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.checkpoint import checkpoint as ckpt_lib
+from repro.comms import faults
 from repro.configs.base import ArchConfig, ShapeSpec
 from repro.data.pipeline import DataConfig, Prefetcher, SyntheticTokens
 from repro.models.model import Model
 from repro.optim.optimizer import OptimizerConfig, opt_init
-from repro.train import steps as steps_lib
+from repro.train import elastic, steps as steps_lib
 
 
 @dataclasses.dataclass
@@ -100,6 +101,9 @@ class Trainer:
             DataConfig(vocab_size=cfg.vocab_size, seq_len=shape.seq_len,
                        global_batch=shape.global_batch), mesh)
         self.history: list = []
+        # wall time the first step of this run completed — the "resume"
+        # end of the supervisor's detect-to-resume measurement
+        self.first_step_done_at: Optional[float] = None
 
     # ------------------------------------------------------------- state
     def init_state(self, seed: int = 0):
@@ -124,14 +128,27 @@ class Trainer:
         return step + 1, params["params"], params["opt"]
 
     # --------------------------------------------------------------- run
-    def run(self, resume: bool = True) -> Dict[str, Any]:
-        restored = self.try_restore() if resume else None
-        if restored is not None:
-            start, params, opt_state = restored
-            print(f"[trainer] restored checkpoint, resuming at step {start}")
+    def run(self, resume: bool = True, state: Optional[tuple] = None,
+            start_step: int = 0) -> Dict[str, Any]:
+        """Run to ``total_steps``.  ``state=(params, opt)`` (live arrays
+        or host snapshots) resumes from in-memory state at ``start_step``
+        with NO checkpoint round-trip — the scale-up path; otherwise
+        ``resume`` restores LATEST from disk if present."""
+        if state is not None:
+            start = start_step
+            params, opt_state = elastic.live_redistribute(
+                state, (self.bundle["params"], self.bundle["opt"]))
+            print(f"[trainer] live state redistributed, resuming at "
+                  f"step {start}")
         else:
-            start = 0
-            params, opt_state = self.init_state()
+            restored = self.try_restore() if resume else None
+            if restored is not None:
+                start, params, opt_state = restored
+                print(f"[trainer] restored checkpoint, resuming at "
+                      f"step {start}")
+            else:
+                start = 0
+                params, opt_state = self.init_state()
         prefetch = Prefetcher(self.data, start_step=start)
         tc = self.tcfg
         metrics = {}
@@ -139,6 +156,17 @@ class Trainer:
             for step in range(start, tc.total_steps):
                 if tc.failure_at is not None and step == tc.failure_at:
                     raise RuntimeError(f"injected failure at step {step}")
+                ev = faults.host_event(step)
+                if ev is not None:
+                    faults.consume(ev)
+                    if ev.kind == faults.LOSE:
+                        # the lost ranks' live state is gone: shrink and
+                        # restore from the last checkpoint (supervisor)
+                        raise elastic.DeviceLossError(step, ev.n_devices)
+                    # capacity returned: nothing lost — hand the LIVE
+                    # state up for redistribution onto the grown mesh
+                    raise elastic.DeviceRestoreInterrupt(
+                        step, ev.n_devices, (params, opt_state))
                 t0 = time.time()
                 got_step, batch = prefetch.next()
                 assert got_step == step, (got_step, step)
@@ -146,6 +174,8 @@ class Trainer:
                     params, opt_state, batch, jnp.asarray(step, jnp.int32))
                 jax.block_until_ready(metrics["loss"])
                 dt = time.time() - t0
+                if self.first_step_done_at is None:
+                    self.first_step_done_at = time.time()
                 want_early_ckpt = self.watchdog.observe(dt)
                 self.history.append(
                     {"step": step, "loss": float(metrics["loss"]),
@@ -168,5 +198,6 @@ class Trainer:
                       keep_last=tc.keep_last)
         return {"params": params, "opt": opt_state,
                 "history": self.history,
+                "flagged": self.watchdog.flagged,
                 "straggler_flags": self.watchdog.flagged,
                 "final_loss": float(metrics["loss"]) if metrics else None}

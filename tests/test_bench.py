@@ -38,7 +38,7 @@ def test_registry_roundtrip_tiny_two_devices():
     assert "OK" in out
     for case in ("p2p", "agg", "bcast", "scatter", "grad_exchange",
                  "stream", "serving", "multipair", "bibw", "msgrate",
-                 "overlap"):
+                 "overlap", "redistribute", "recovery"):
         assert case in out
 
 
@@ -47,7 +47,8 @@ def test_registry_metadata():
     assert {c.name for c in cases} >= {"p2p", "agg", "bcast", "scatter",
                                        "grad_exchange", "stream", "serving",
                                        "multipair", "bibw", "msgrate",
-                                       "overlap"}
+                                       "overlap", "redistribute",
+                                       "recovery"}
     for c in cases:
         assert c.ndev >= 1 and c.figure and c.description
     with pytest.raises(ValueError):
@@ -195,7 +196,7 @@ def test_committed_baseline_is_schema_valid():
     cases = {r["case"] for r in doc["rows"]}
     assert {"p2p", "agg", "bcast", "scatter", "grad_exchange",
             "stream", "serving", "multipair", "bibw", "msgrate",
-            "overlap"} <= cases
+            "overlap", "redistribute", "recovery"} <= cases
     # acceptance tie-in: the baseline's overlap rows must show a positive
     # recovered fraction on at least two transports, and the overlapped
     # full train step must not be slower than blocking beyond the gate

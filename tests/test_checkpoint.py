@@ -60,6 +60,43 @@ def test_async_checkpointer_snapshots_before_donation(ckdir):
     assert float(jnp.sum(out["a"])) == 15.0
 
 
+def test_latest_skips_truncated_leaf(ckdir):
+    """A torn write (disk full, killed copy) that truncates a leaf file
+    must not be offered for restore — failover falls back to the
+    previous complete step."""
+    ck.save(ckdir, 1, tree())
+    ck.save(ckdir, 2, tree())
+    with open(os.path.join(ckdir, "step_00000002", "leaf_0.npy"), "w"):
+        pass  # truncate to zero bytes
+    assert ck.latest_step(ckdir) == 1
+
+
+def test_latest_skips_missing_leaf_and_bad_manifest(ckdir):
+    ck.save(ckdir, 3, tree())
+    ck.save(ckdir, 5, tree())
+    ck.save(ckdir, 8, tree())
+    os.remove(os.path.join(ckdir, "step_00000008", "leaf_1.npy"))
+    with open(os.path.join(ckdir, "step_00000005", "manifest.json"),
+              "w") as f:
+        f.write("{not json")
+    assert ck.latest_step(ckdir) == 3
+
+
+def test_latest_ignores_inflight_tmp_dir(ckdir):
+    """A crash mid-write leaves a .tmp dir; it must never be listed or
+    restored (atomic rename is the commit point)."""
+    ck.save(ckdir, 1, tree())
+    os.makedirs(os.path.join(ckdir, "step_00000009.tmp0"))
+    assert ck.all_steps(ckdir) == [1]
+    assert ck.latest_step(ckdir) == 1
+
+
+def test_latest_none_when_all_corrupt(ckdir):
+    ck.save(ckdir, 4, tree())
+    os.remove(os.path.join(ckdir, "step_00000004", "manifest.json"))
+    assert ck.latest_step(ckdir) is None
+
+
 def test_restore_with_mismatched_count_raises(ckdir):
     ck.save(ckdir, 0, tree())
     with pytest.raises(AssertionError):

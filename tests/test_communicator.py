@@ -124,16 +124,3 @@ def test_commspec_and_registry():
     assert set(TRANSPORTS) <= set(available_transports())
 
 
-def test_for_name_shim_deprecated():
-    import warnings
-
-    from repro.comms import Transport, backend
-
-    with warnings.catch_warnings(record=True) as w:
-        warnings.simplefilter("always")
-        be = backend.for_name("tree", "pod", ("data",))
-    assert any(issubclass(x.category, DeprecationWarning) for x in w)
-    assert isinstance(be, Transport)
-    with pytest.raises(ValueError), warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        backend.for_name("nope", None, ("data",))
