@@ -560,6 +560,62 @@ def run_grad_exchange(ctx: BenchContext):
                            f"seq={pr.gradex_step_seq}")
 
 
+# --------------------------------------------------------- compression
+
+
+@register_case("compression", figure="fig3", ndev=8,
+               description="wire vs effective GB/s for the compressed "
+                           "allreduce: each quantization dtype composed "
+                           "with the tree/hier transports")
+def run_compression(ctx: BenchContext):
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from repro.comms import CommSpec, Communicator, CompressionSpec
+
+    if ctx.ndev >= 8:
+        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+        axes = ("pod", "data")
+    else:  # tiny/test budget: batch-axis-only exchange, no pod level
+        mesh = jax.make_mesh((ctx.ndev,), ("data",))
+        axes = ("data",)
+    ranks = ctx.ndev if ctx.ndev < 8 else 8
+    spec = P(tuple(mesh.axis_names))
+    # cross-pod dominates a hierarchical exchange, so scope the wire
+    # quantization there — exactly what `--grad-comms tree_int8` runs
+    for size in ctx.profile.compress_sizes:
+        n = max(size // 4 // ranks, 1)          # f32 elements per rank
+        x = jnp.ones((ranks, n), jnp.float32)
+        logical = 4 * n                          # per-rank payload, bytes
+        for tname in ("tree", "hier"):
+            base = CommSpec.from_flag(tname)
+            for dtype in (None, "int8", "fp8", "int4"):
+                if dtype is None:
+                    cs, cspec, label = base, None, "none"
+                else:
+                    cspec = CompressionSpec(dtype=dtype, scope="cross-pod")
+                    cs = dataclasses.replace(base, compression=cspec)
+                    label = dtype
+                comm = Communicator(mesh, cs, axes=axes)
+                f = jax.jit(comm.wrap(comm.allreduce, in_specs=(spec,),
+                                      out_specs=spec))
+                st = ctx.measure(f, x)
+                eff = gbps(logical, st["median_us"])
+                if cspec is None:
+                    wire, note = eff, "uncompressed"
+                else:
+                    wb = cspec.wire_bytes(n)
+                    wire = gbps(wb, st["median_us"])
+                    note = f"ratio={cspec.ratio(n):.2f}x"
+                yield ctx.row(
+                    f"compress_{tname}_{label}_{size}B", transport=tname,
+                    ranks=ranks, size_bytes=size, stats=st, gbps=eff,
+                    wire_gbps=wire, effective_gbps=eff, note=note)
+
+
 # -------------------------------------------------------------- stream
 
 

@@ -62,6 +62,8 @@ class Profile:
     # elastic families (repro/bench/elastic.py)
     redist_shape: Tuple[int, int] = (256, 64)   # global Dmat extent
     recovery_steps: int = 6             # supervised run length (steps)
+    # compression family: per-rank payload bytes (wire vs effective GB/s)
+    compress_sizes: Tuple[int, ...] = (16 * 1024, 256 * 1024)
 
 
 PROFILES: Dict[str, Profile] = {
@@ -82,7 +84,8 @@ PROFILES: Dict[str, Profile] = {
                     overlap_slots=16,
                     gradex_step_batch=32, gradex_step_seq=32,
                     gradex_step_mb=4,
-                    redist_shape=(1024, 256), recovery_steps=8),
+                    redist_shape=(1024, 256), recovery_steps=8,
+                    compress_sizes=(64 * 1024, 1 << 20, 8 << 20)),
     "ci": Profile("ci", warmup=2, iters=7,
                   p2p_sizes=(16, 1024, 64 * 1024, 1024 * 1024),
                   coll_sizes=(8, 8 * 1024, 256 * 1024),
@@ -115,7 +118,8 @@ PROFILES: Dict[str, Profile] = {
                     overlap_slots=4,
                     gradex_step_batch=8, gradex_step_seq=8,
                     gradex_step_mb=2,
-                    redist_shape=(32, 16), recovery_steps=4),
+                    redist_shape=(32, 16), recovery_steps=4,
+                    compress_sizes=(1024, 4096)),
 }
 
 
@@ -206,7 +210,12 @@ class BenchContext:
 
     def row(self, name: str, *, ranks: int, size_bytes: int,
             stats: Dict[str, float], transport: Optional[str] = None,
-            gbps: Optional[float] = None, note: str = "") -> dict:
+            gbps: Optional[float] = None, wire_gbps: Optional[float] = None,
+            effective_gbps: Optional[float] = None, note: str = "") -> dict:
+        """``wire_gbps`` rates the bytes that actually crossed the link
+        (post-quantization payload + scales), ``effective_gbps`` the
+        logical float32 payload the caller moved — the compression
+        family reports both so the gate tracks real bytes moved."""
         return {
             "name": name, "case": self.case.name,
             "figure": self.case.figure, "transport": transport,
@@ -216,12 +225,19 @@ class BenchContext:
             "p95_us": float(stats["p95_us"]),
             "min_us": float(stats["min_us"]),
             "iters": self.profile.iters, "warmup": self.profile.warmup,
-            "gbps": None if gbps is None else float(gbps), "note": note,
+            "gbps": None if gbps is None else float(gbps),
+            "wire_gbps": None if wire_gbps is None else float(wire_gbps),
+            "effective_gbps": (None if effective_gbps is None
+                               else float(effective_gbps)),
+            "note": note,
         }
 
     def model_row(self, name: str, *, us: float, ranks: int,
                   size_bytes: int, transport: Optional[str] = None,
-                  gbps: Optional[float] = None, note: str = "") -> dict:
+                  gbps: Optional[float] = None,
+                  wire_gbps: Optional[float] = None,
+                  effective_gbps: Optional[float] = None,
+                  note: str = "") -> dict:
         """A modeled (analytic, not timed) row — v5e-scale extrapolation."""
         return {
             "name": name, "case": self.case.name,
@@ -230,5 +246,9 @@ class BenchContext:
             "measured": False,
             "median_us": float(us), "p95_us": float(us),
             "min_us": float(us), "iters": 0, "warmup": 0,
-            "gbps": None if gbps is None else float(gbps), "note": note,
+            "gbps": None if gbps is None else float(gbps),
+            "wire_gbps": None if wire_gbps is None else float(wire_gbps),
+            "effective_gbps": (None if effective_gbps is None
+                               else float(effective_gbps)),
+            "note": note,
         }

@@ -15,7 +15,10 @@ import subprocess
 from typing import Dict, Iterable, List
 
 SCHEMA = "repro-bench"
-SCHEMA_VERSION = 1
+# version 2: rows may carry ``wire_gbps``/``effective_gbps`` (the
+# compression family rates real bytes-on-wire separately from the
+# logical float32 payload)
+SCHEMA_VERSION = 2
 
 _ROW_FIELDS = {
     "name": str, "case": str, "figure": str, "ranks": int,
@@ -23,7 +26,10 @@ _ROW_FIELDS = {
     "p95_us": (int, float), "min_us": (int, float), "iters": int,
     "warmup": int, "note": str,
 }
-_OPTIONAL_ROW_FIELDS = ("transport", "gbps")  # may be null
+_OPTIONAL_ROW_FIELDS = ("transport", "gbps", "wire_gbps",
+                        "effective_gbps")  # may be null/absent
+#: optional fields that, when present, must be non-negative numbers
+_RATE_FIELDS = ("gbps", "wire_gbps", "effective_gbps")
 
 
 def git_sha() -> str:
@@ -95,6 +101,17 @@ def validate(doc: dict) -> None:
             v = row.get(field)
             if v is not None and not isinstance(v, (str, int, float)):
                 raise ValueError(f"rows[{i}]: bad optional field {field!r}")
+        for field in _RATE_FIELDS:
+            v = row.get(field)
+            if v is None:
+                continue
+            if isinstance(v, bool) or not isinstance(v, (int, float)):
+                raise ValueError(f"rows[{i}] ({row.get('name')!r}): "
+                                 f"{field!r} must be a number or null, "
+                                 f"got {v!r}")
+            if v < 0:
+                raise ValueError(f"rows[{i}] ({row.get('name')!r}): "
+                                 f"negative {field!r}")
         if row["median_us"] < 0 or row["min_us"] < 0:
             raise ValueError(f"rows[{i}]: negative timing")
         if not row["min_us"] <= row["median_us"] <= row["p95_us"]:

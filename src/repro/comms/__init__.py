@@ -10,7 +10,12 @@ Public surface:
   * :class:`Topology` — the (pod, in_axes) hierarchy, derived from a
     mesh in exactly one place.
   * transport registry — ``register_transport`` / ``get_transport`` /
-    ``available_transports`` (native, tree, serial, hier, hier_int8).
+    ``available_transports`` (native, tree, serial, hier, and the
+    ``hier_int8`` compression alias).
+  * wire compression — :class:`CompressionSpec` /
+    :class:`CompressedTransport` (``repro.comms.compression``):
+    int8/fp8/int4 per-block quantization composable with any transport,
+    plus error-feedback accumulation (``Communicator.allreduce_ef``).
   * fault injection — :class:`FaultPlan` / :class:`HostEvent` and the
     ``faults.arm``/``armed`` switches; Communicators built while a plan
     is armed wrap every transport in deterministic chaos (see
@@ -18,6 +23,7 @@ Public surface:
 """
 from repro.comms import faults
 from repro.comms.communicator import CommSpec, Communicator
+from repro.comms.compression import CompressedTransport, CompressionSpec
 from repro.comms.faults import FaultPlan, HostEvent
 from repro.comms.topology import Topology
 from repro.comms.transports import (Transport, available_transports,
@@ -25,4 +31,5 @@ from repro.comms.transports import (Transport, available_transports,
 
 __all__ = ["Communicator", "CommSpec", "Topology", "Transport",
            "available_transports", "get_transport", "register_transport",
+           "CompressionSpec", "CompressedTransport",
            "FaultPlan", "HostEvent", "faults"]

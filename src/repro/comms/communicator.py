@@ -13,7 +13,9 @@ constructed once from a mesh (hierarchy derived in one place by
                      never hand-roll their own ``shard_map``
 
 with per-op algorithm selection via ``CommSpec`` and the transport
-registry (native / tree / serial / hier / hier_int8).  All data ops are
+registry (native / tree / serial / hier / hier_int8), plus optional wire
+compression (``CommSpec.compression`` wraps every transport in a
+``CompressedTransport``) and error-feedback allreduce.  All data ops are
 pytree-aware.  See repro/comms/README.md for the paper-function mapping.
 """
 from __future__ import annotations
@@ -27,8 +29,11 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.comms import compat, faults
+from repro.comms import compression as compression_lib
+from repro.comms.compression import CompressionSpec
 from repro.comms.topology import Topology
-from repro.comms.transports import Transport, get_transport
+from repro.comms.transports import (Transport, available_transports,
+                                    get_transport)
 
 Array = jax.Array
 
@@ -45,6 +50,11 @@ class CommSpec:
     slot *behind* the compute that produced its operand, so the exchange
     of slot *i* is in flight while slot *i+1* computes.  Transports are
     oblivious — the same algorithms run either way.
+
+    ``compression`` composes a :class:`CompressionSpec` with every op's
+    transport (``CompressedTransport``); its ``error_feedback`` flag is,
+    like ``overlap``, a consumer hint — ``allreduce_ef`` and the train
+    step act on it, transports are oblivious.
     """
 
     allreduce: str = "native"
@@ -55,27 +65,69 @@ class CommSpec:
     scatter: str = "native"
     alltoall: str = "native"            # also drives alltoallv
     overlap: bool = False               # pipeline collectives behind compute
+    compression: Optional[CompressionSpec] = None
 
     @classmethod
     def from_flag(cls, flag: str) -> "CommSpec":
         """Map a CLI-style algorithm flag (--grad-comms) to a spec.
-        A ``_overlap`` suffix (``tree_overlap``, ``hier_overlap``, ...)
-        selects the same transport with ``overlap=True``.  'auto' (GSPMD,
-        no explicit comms) must be handled by the caller *before*
-        building a Communicator."""
+
+        Grammar: ``<transport>[_<dtype>][_all][_ef][_overlap]`` —
+        ``<transport>`` is any registered name, ``<dtype>`` one of
+        int8/fp8/int4 (wire compression, cross-pod scope by default),
+        ``_all`` widens compression to every leg, ``_ef`` enables
+        error-feedback accumulation, ``_overlap`` the pipelined
+        schedule.  Unknown combinations raise ``ValueError`` at parse
+        time (not deep in tracing).  'auto' (GSPMD, no explicit comms)
+        must be handled by the caller *before* building a Communicator.
+        """
         if flag == "auto":
             raise ValueError("grad_comms='auto' means GSPMD handles the "
                              "exchange; no Communicator is involved")
-        overlap = flag.endswith("_overlap")
-        base = flag[:-len("_overlap")] if overlap else flag
-        return cls(**{op: base for op in _OPS}, overlap=overlap)
+        names = available_transports()
+
+        def fail():
+            raise ValueError(
+                f"unknown comms flag {flag!r}; expected "
+                f"<transport>[_<dtype>][_all][_ef][_overlap] with "
+                f"transport in {sorted(names)} and dtype in "
+                f"{list(compression_lib.DTYPES)}")
+
+        rest, overlap = flag, False
+        if rest.endswith("_overlap"):
+            rest, overlap = rest[:-len("_overlap")], True
+        ef = False
+        if rest.endswith("_ef"):
+            rest, ef = rest[:-len("_ef")], True
+        scope = "cross-pod"
+        if rest.endswith("_all"):
+            rest, scope = rest[:-len("_all")], "all"
+
+        cspec: Optional[CompressionSpec] = None
+        if rest in names:
+            base = rest
+            if base == "hier_int8" and (ef or scope == "all"):
+                # modifiers need an explicit spec; decompose the alias
+                base = "hier"
+                cspec = dataclasses.replace(compression_lib.LEGACY_INT8,
+                                            error_feedback=ef, scope=scope)
+            elif ef or scope == "all":
+                fail()      # _ef/_all only modify a compressed mode
+        else:
+            base, _, dtype = rest.rpartition("_")
+            if (dtype not in compression_lib.DTYPES or base not in names
+                    or base == "hier_int8"):
+                fail()
+            cspec = CompressionSpec(dtype=dtype, scope=scope,
+                                    error_feedback=ef)
+        return cls(**{op: base for op in _OPS}, overlap=overlap,
+                   compression=cspec)
 
 
 def _as_spec(spec: Union[str, CommSpec, None]) -> CommSpec:
     if spec is None:
         return CommSpec()
     if isinstance(spec, str):
-        return CommSpec(**{op: spec for op in _OPS})
+        return CommSpec.from_flag(spec)
     return spec
 
 
@@ -98,11 +150,18 @@ class Communicator:
         # maybe_wrap is the identity when chaos is disarmed, so the
         # common path carries zero wrapper overhead
         self.fault_plan = faults.active_plan()
-        self._t: Dict[str, Transport] = {
-            op: faults.maybe_wrap(
-                get_transport(getattr(self.spec, op), self.topo),
-                self.fault_plan)
-            for op in _OPS}
+
+        def make(op: str) -> Transport:
+            t = get_transport(getattr(self.spec, op), self.topo)
+            if self.spec.compression is not None:
+                # compression sits inside chaos: fault retries corrupt
+                # the float payload, the clean attempt is the compressed
+                # exchange
+                t = compression_lib.CompressedTransport(
+                    t, self.spec.compression)
+            return faults.maybe_wrap(t, self.fault_plan)
+
+        self._t: Dict[str, Transport] = {op: make(op) for op in _OPS}
         self._sync_fn = None
 
     # -------------------------------------------------------------- identity
@@ -153,6 +212,23 @@ class Communicator:
 
     def allreduce(self, x: Any) -> Any:
         return jax.tree.map(self._t["allreduce"].allreduce, x)
+
+    def allreduce_ef(self, x: Any, err: Any):
+        """Error-feedback allreduce (in-shard_map): ``v = x + err`` is
+        projected through the wire's lossy C(.) *locally* (``qdq``)
+        before the exchange; returns ``(allreduce(C(v)), v - C(v))`` —
+        the residual to add into the next step's operand.  Because C(v)
+        is already on the quantization grid, the first wire hop loses
+        nothing; EF re-injects what C itself dropped.  With no
+        compression spec C is the identity and the residual stays
+        zero."""
+        v = jax.tree.map(lambda a, e: a + e.astype(a.dtype), x, err)
+        cspec = self.spec.compression
+        if cspec is None:
+            return self.allreduce(v), jax.tree.map(jnp.zeros_like, v)
+        c = jax.tree.map(lambda a: compression_lib.qdq(a, cspec), v)
+        resid = jax.tree.map(lambda a, b: a - b, v, c)
+        return self.allreduce(c), resid
 
     def _check_rank(self, rank: int, what: str) -> int:
         if not 0 <= rank < self.size:

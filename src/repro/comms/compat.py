@@ -82,6 +82,14 @@ def axis_size(axis) -> int:
 _EMU: contextvars.ContextVar = contextvars.ContextVar(
     "comms_partial_manual_ctx", default=None)
 
+# Wire-compression context (set by repro.comms.compression.compressing):
+# when active, the five wire primitives below hand in-scope floating
+# payloads to the handler, which quantizes, re-enters these primitives
+# with integer payloads + scales, and dequantizes.  compat never imports
+# compression — the dependency points one way.
+_COMPRESS: contextvars.ContextVar = contextvars.ContextVar(
+    "comms_wire_compression", default=None)
+
 
 def enter_partial_manual(rank, axes: Sequence[str], sizes: Sequence[int]):
     """Activate emulation for the duration of one shard_map body trace.
@@ -126,6 +134,9 @@ def psum(x, axis):
     ``where``), anchoring its sharding inside the manual subgroup —
     without this, the 0.4.x partitioner CHECK-fails on operands whose
     sharding it attributes to the auto region."""
+    c = _COMPRESS.get()
+    if c is not None and c.applies(axis, x):
+        return c.psum(x, axis)
     ctx = _EMU.get()
     if ctx is not None:
         x = jnp.where(ctx["rank"] >= 0, x, jnp.zeros_like(x))
@@ -136,6 +147,9 @@ def ppermute(x, axis, perm):
     """`lax.ppermute`, or — under emulation — one masked-psum round per
     (src, dst) pair: dst receives src's payload, non-destinations get
     zeros (exactly ppermute's semantics)."""
+    c = _COMPRESS.get()
+    if c is not None and c.applies(axis, x):
+        return c.ppermute(x, axis, perm)
     ctx = _EMU.get()
     if ctx is None:
         return lax.ppermute(x, axis, perm)
@@ -150,6 +164,9 @@ def ppermute(x, axis, perm):
 def all_gather_tiled(x, axis):
     """Tiled concat-gather of a flat per-rank block along ``axis`` —
     emulated as scatter-into-zeros + psum when required."""
+    c = _COMPRESS.get()
+    if c is not None and c.applies(axis, x):
+        return c.all_gather(x, axis)
     ctx = _EMU.get()
     if ctx is None:
         return lax.all_gather(x, axis, axis=0, tiled=True)
@@ -167,6 +184,9 @@ def all_to_all_blocks(x, axis, dim=0):
     ranks on ``axis``); the result holds one block per *source* (block s
     = rank s's block addressed to this rank).  Emulated as full
     all-gather + source-column selection when required."""
+    c = _COMPRESS.get()
+    if c is not None and c.applies(axis, x):
+        return c.all_to_all(x, axis, dim)
     ctx = _EMU.get()
     if ctx is None:
         return lax.all_to_all(x, axis, dim, dim, tiled=False)
@@ -180,6 +200,9 @@ def psum_scatter_blocks(x, axis):
     """``lax.psum_scatter`` of ``x`` shaped (n_ranks_along_axis, blk):
     global sum, each rank keeping its own block — emulated as full psum +
     dynamic row slice when required."""
+    c = _COMPRESS.get()
+    if c is not None and c.applies(axis, x):
+        return c.psum_scatter(x, axis)
     ctx = _EMU.get()
     if ctx is None:
         return lax.psum_scatter(x, axis, scatter_dimension=0, tiled=False)

@@ -14,16 +14,23 @@ shard_map (the Communicator owns pytree mapping and the jit-level
 * ``serial``    — the paper's *initial* serialized broadcast (the Fig 7
   baseline), kept for comparison.
 * ``hier``      — beyond-paper reduce-scatter hierarchy.
-* ``hier_int8`` — ``hier`` with int8 cross-pod compression.
+* ``hier_int8`` — alias registered by ``repro.comms.compression``:
+  ``hier`` wrapped in the legacy per-tensor int8 ``CompressionSpec``
+  (bitwise-identical to the historical bespoke transport).
+
+Wire compression is NOT a transport concern: any registered transport
+composes with ``compression.CompressedTransport``, which intercepts the
+compat wire primitives the schedules here already use.
 
 New transports register with ``@register_transport("name")`` — the
 swappable-messaging-library architecture point of the paper, made a
-one-decorator extension.
+one-decorator extension.  The registry maps names to factories taking a
+Topology, so plain functions register too (the ``hier_int8`` alias).
 """
 from __future__ import annotations
 
 import abc
-from typing import Callable, Dict, Optional, Tuple
+from typing import Callable, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -85,11 +92,9 @@ class Transport(abc.ABC):
     """
 
     name: str = "?"
-    # all-to-all knobs: ``a2a_serial`` switches the scheduled exchange to
-    # the one-pair-per-round baseline; ``compress`` ('int8') quantizes
-    # cross-pod round payloads (floating dtypes only).
+    # ``a2a_serial`` switches the scheduled all-to-all exchange to the
+    # one-pair-per-round baseline.
     a2a_serial: bool = False
-    compress: Optional[str] = None
 
     def __init__(self, topo: Topology):
         self.topo = topo
@@ -130,10 +135,8 @@ class Transport(abc.ABC):
         to the routed-exchange pattern.  ``native`` overrides with XLA's
         ``all_to_all``."""
         def leg(blocks, axis, dim):
-            comp = self.compress if axis == self.topo.pod_axis else None
             return coll.pairwise_alltoall_axis(
-                blocks, axis, dim=dim, serial=self.a2a_serial,
-                compress=comp)
+                blocks, axis, dim=dim, serial=self.a2a_serial)
         return self._per_axis_alltoall(x, leg)
 
     def alltoallv(self, x: Array, counts) -> Array:
@@ -313,16 +316,9 @@ class SerialTransport(TreeTransport):
 @register_transport("hier")
 class HierTransport(TreeTransport):
     """Beyond-paper: in-pod reduce-scatter -> cross-pod all-reduce ->
-    in-pod all-gather, optionally int8-compressed across pods."""
-
-    compress: Optional[str] = None
+    in-pod all-gather.  The cross-pod leg goes through ``compat.psum``,
+    so a wrapping CompressedTransport quantizes exactly that hop."""
 
     def allreduce(self, x):
         return coll.hier_allreduce_local(x, pod_axis=self.topo.pod_axis,
-                                         in_axes=self.topo.in_axes,
-                                         compress=self.compress)
-
-
-@register_transport("hier_int8")
-class HierInt8Transport(HierTransport):
-    compress = "int8"
+                                         in_axes=self.topo.in_axes)

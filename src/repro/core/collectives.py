@@ -9,9 +9,11 @@ Three families, all expressed as `shard_map` bodies over mesh axes:
 * ``serial_*`` — pPython's *initial* serialized algorithms (the Fig 7
   baseline): P-1 rounds.
 * ``hier_*``   — the beyond-paper production variant: in-pod
-  reduce-scatter -> cross-pod all-reduce (optionally int8-compressed:
-  the slow-DCI analogue of the paper's "use the right filesystem per
-  level" finding) -> in-pod all-gather.
+  reduce-scatter -> cross-pod all-reduce -> in-pod all-gather.  Wire
+  compression (the slow-DCI analogue of the paper's "use the right
+  filesystem per level" finding) is layered on by
+  ``repro.comms.compression`` intercepting the compat shims these
+  schedules already route through.
 
 The native XLA collectives (plain psum/all_gather) play the role of the
 paper's mpi4py/OpenMPI-RoCE baseline.
@@ -113,8 +115,7 @@ def tree_gather_axis(x: Array, axis: str, root: int = 0) -> Array:
 
 
 def pairwise_alltoall_axis(x: Array, axis: str, *, dim: int = 0,
-                           serial: bool = False,
-                           compress: Optional[str] = None) -> Array:
+                           serial: bool = False) -> Array:
     """In-shard_map all-to-all along one mesh axis via explicit
     ``ppermute`` rounds (the scheduled-transport analogue of
     ``lax.all_to_all``).
@@ -125,26 +126,17 @@ def pairwise_alltoall_axis(x: Array, axis: str, *, dim: int = 0,
     ``topology.pairwise_alltoall_rounds``: disjoint XOR partner pairs for
     power-of-two n (nearest neighbours first), rotation rounds otherwise,
     or one-pair-per-round when ``serial=True`` (the paper's serialized
-    baseline).  ``compress='int8'`` quantizes floating payloads per round
-    (per-block scale) — used by ``hier_int8`` on the cross-pod axis.
+    baseline).  Round payloads move through ``_ppermute`` (the compat
+    shim), so a wire-compression context quantizes them without this
+    schedule knowing.
     """
     n = _axis_size(axis)
     if n == 1:
         return x
     me = _axis_index(axis)
-    do_compress = (compress == "int8"
-                   and jnp.issubdtype(x.dtype, jnp.floating))
 
     def exchange(blk, perm):
-        if not do_compress:
-            return _ppermute(blk, axis, perm)
-        amax = jnp.max(jnp.abs(blk.astype(jnp.float32)))
-        scale = jnp.maximum(amax, 1e-8) / 127.0
-        q = jnp.clip(jnp.round(blk.astype(jnp.float32) / scale),
-                     -127, 127).astype(jnp.int8)
-        qr = _ppermute(q, axis, perm)
-        sr = _ppermute(scale, axis, perm)
-        return (qr.astype(jnp.float32) * sr).astype(blk.dtype)
+        return _ppermute(blk, axis, perm)
 
     out = x
     for kind, arg, perm in topology.pairwise_alltoall_rounds(n, serial):
@@ -234,12 +226,13 @@ def two_level_agg(x: Array, *, pod_axis: Optional[str],
 
 
 def hier_allreduce_local(x: Array, *, pod_axis: Optional[str],
-                         in_axes: Sequence[str],
-                         compress: Optional[str] = None) -> Array:
+                         in_axes: Sequence[str]) -> Array:
     """In-shard_map hierarchical all-reduce (beyond-paper production
-    variant): reduce-scatter in-pod -> all-reduce cross-pod (optionally
-    int8) -> all-gather in-pod.  Falls back to plain psum for shapes that
-    do not divide."""
+    variant): reduce-scatter in-pod -> all-reduce cross-pod -> all-gather
+    in-pod.  The cross-pod leg goes through the compat ``psum`` shim, so
+    a wire-compression context (``hier_int8`` & friends) quantizes
+    exactly that hop.  Falls back to plain psum for shapes that do not
+    divide."""
     shape = x.shape
     flat = x.reshape(-1)
     n_in = 1
@@ -253,14 +246,7 @@ def hier_allreduce_local(x: Array, *, pod_axis: Optional[str],
     # in-pod reduce-scatter over the (flattened) composite axis
     shard = _psum_scatter(flat.reshape(n_in, -1), tuple(in_axes))
     if pod_axis is not None:
-        if compress == "int8":
-            scale = jnp.maximum(jnp.max(jnp.abs(shard)), 1e-8) / 127.0
-            scale = lax.pmax(scale, pod_axis)
-            q = jnp.clip(jnp.round(shard / scale), -127, 127
-                         ).astype(jnp.int32)
-            shard = lax.psum(q, pod_axis).astype(shard.dtype) * scale
-        else:
-            shard = lax.psum(shard, pod_axis)
+        shard = _psum(shard, pod_axis)
     out = _all_gather(shard, tuple(in_axes))
     return out.reshape(shape)
 

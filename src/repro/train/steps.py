@@ -15,10 +15,21 @@ The data-parallel gradient exchange comes in three shapes (selected by
   top of iteration *i+1*, before that microbatch's forward/backward —
   no data dependence links them, so XLA is free to run the in-flight
   collective behind the compute.
+
+Compressed modes (``<transport>_<int8|fp8|int4>[_ef]``) put a
+``CompressionSpec`` on the CommSpec so every wire leg in scope moves
+quantized bytes; ``_ef`` additionally threads per-bucket error-feedback
+residuals through the step (``v = g + e`` is projected through the
+wire's lossy C(.) locally, ``e' = v - C(v)`` carries to the next
+exchange), making compressed training converge like exact.  EF state is
+per-rank, bucket-shaped, and NOT checkpointed — restore resets it to
+zeros, which costs one step of residual (benign).  Both compose with
+``_overlap``.
 """
 from __future__ import annotations
 
 import functools
+from math import prod
 from typing import Any, Dict, List, Tuple
 
 import jax
@@ -33,10 +44,30 @@ from repro.optim.optimizer import (OptimizerConfig, clip_by_global_norm,
                                    opt_init, opt_pspecs, opt_update)
 
 #: every accepted --grad-comms flag: GSPMD, the five explicit transports,
-#: and their double-buffered overlap variants
-GRAD_COMMS_MODES = ("auto", "native", "tree", "serial", "hier", "hier_int8",
-                    "native_overlap", "tree_overlap", "serial_overlap",
-                    "hier_overlap", "hier_int8_overlap")
+#: their double-buffered overlap variants, and the compressed modes
+#: (tree/hier x int8/fp8/int4, each with optional _ef and/or _overlap)
+_COMPRESSED_MODES = tuple(f"{t}_{d}" for t in ("tree", "hier")
+                          for d in ("int8", "fp8", "int4"))
+GRAD_COMMS_MODES = tuple(dict.fromkeys(
+    ("auto", "native", "tree", "serial", "hier", "hier_int8",
+     "native_overlap", "tree_overlap", "serial_overlap",
+     "hier_overlap", "hier_int8_overlap")
+    + _COMPRESSED_MODES
+    + tuple(f"{m}_ef" for m in _COMPRESSED_MODES)
+    + tuple(f"{m}_overlap" for m in _COMPRESSED_MODES)
+    + tuple(f"{m}_ef_overlap" for m in _COMPRESSED_MODES)))
+
+
+def flag_uses_ef(grad_comms) -> bool:
+    """Whether a --grad-comms flag (or explicit CommSpec) carries
+    error-feedback state (and so the step function takes/returns an
+    extra ``ef`` argument)."""
+    if grad_comms == "auto":
+        return False
+    from repro.comms import CommSpec
+    spec = (grad_comms if isinstance(grad_comms, CommSpec)
+            else CommSpec.from_flag(grad_comms))
+    return spec.compression is not None and spec.compression.error_feedback
 
 
 def effective_microbatches(cfg: ArchConfig, global_batch: int,
@@ -90,10 +121,81 @@ def bucketed_allreduce(comm, tree):
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
+def bucketed_allreduce_ef(comm, tree, ef):
+    """:func:`bucketed_allreduce` with per-bucket error feedback:
+    ``v = bucket + e`` is projected through the wire's lossy C(.)
+    locally (``compression.qdq``), ``C(v)`` is exchanged (already
+    on-grid, so the first hop loses nothing), and ``e' = v - C(v)``
+    is returned for the next exchange.  ``ef`` is a tuple of per-rank
+    residual rows in :func:`grad_bucket_indices` order (shape
+    ``(1, bucket_size)`` inside the wrap); residuals stay at raw
+    (pre-normalization) gradient scale."""
+    from repro.comms import compression
+    cspec = comm.spec.compression
+    paths_and_leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    leaves = [leaf for _, leaf in paths_and_leaves]
+    out: List[Any] = [None] * len(leaves)
+    new_ef = list(ef)
+    buckets = grad_bucket_indices(tree)
+    for bi in reversed(range(len(buckets))):
+        idxs = buckets[bi]
+        vals = [leaves[i] for i in idxs]
+        v = (jnp.concatenate([t.reshape(-1) for t in vals])
+             + ef[bi].reshape(-1))
+        c = compression.qdq(v, cspec) if cspec is not None else v
+        new_ef[bi] = (v - c).reshape(ef[bi].shape)
+        buf = comm.allreduce(c)
+        off = 0
+        for i, t in zip(idxs, vals):
+            out[i] = lax.slice(buf, (off,), (off + t.size,)).reshape(t.shape)
+            off += t.size
+    return jax.tree_util.tree_unflatten(treedef, out), tuple(new_ef)
+
+
+# -------------------------------------------------------- error-feedback state
+
+def ef_bucket_sizes(model: Model) -> Tuple[int, ...]:
+    """Flat element count of each gradient bucket, in
+    :func:`grad_bucket_indices` order."""
+    tree = model.init_abstract()
+    leaves = jax.tree_util.tree_flatten(tree)[0]
+    return tuple(sum(prod(leaves[i].shape) for i in idxs)
+                 for idxs in grad_bucket_indices(tree))
+
+
+def _ef_batch_ranks(model: Model) -> Tuple[Tuple[str, ...], int]:
+    baxes = partition.mesh_batch_axes(model.mesh, model.cfg)
+    n = 1
+    for a in baxes:
+        n *= model.mesh.shape[a]
+    return tuple(baxes), n
+
+
+def ef_shardings(model: Model):
+    """One NamedSharding per bucket: residuals live as (n_batch_ranks,
+    size) arrays sharded over the batch axes, so each rank owns exactly
+    its own (1, size) row inside the manual region."""
+    baxes, _ = _ef_batch_ranks(model)
+    return tuple(NamedSharding(model.mesh, P(baxes))
+                 for _ in ef_bucket_sizes(model))
+
+
+def ef_init(model: Model):
+    """Zero-initialized error-feedback state (tuple of per-bucket
+    residual arrays, device-placed on their shardings)."""
+    _, n = _ef_batch_ranks(model)
+    return tuple(
+        jax.device_put(jnp.zeros((n, s), jnp.float32), sh)
+        for s, sh in zip(ef_bucket_sizes(model), ef_shardings(model)))
+
+
 def make_train_step(model: Model, ocfg: OptimizerConfig,
                     global_batch: int, grad_comms: str = "auto"):
-    """Returns train_step(params, opt_state, batch, step) ->
-    (params, opt_state, metrics).
+    """Returns (train_step, mb).  train_step(params, opt_state, batch,
+    step) -> (params, opt_state, metrics) — except for error-feedback
+    modes (``flag_uses_ef``), where it is train_step(params, opt_state,
+    batch, step, ef) -> (params, opt_state, metrics, ef) with ``ef``
+    the per-bucket residual state from :func:`ef_init`.
 
     ``grad_comms`` selects the data-parallel gradient exchange:
       * ``auto``       — GSPMD inserts flat all-reduces (mpi4py analogue);
@@ -107,8 +209,12 @@ def make_train_step(model: Model, ocfg: OptimizerConfig,
         pipelines it: microbatch *i*'s bucket exchange is issued before
         microbatch *i+1*'s forward/backward (one-slot-deep double
         buffering), and the last microbatch's exchange drains after the
-        scan.  All explicit modes issue ONE loss collective per step
-        (hoisted out of the scan), not one per microbatch.
+        scan.  A ``_<int8|fp8|int4>`` infix (``tree_int8``,
+        ``hier_fp8_ef_overlap``, ...) compresses the wire legs in scope
+        (see ``repro.comms.compression``); ``_ef`` threads per-bucket
+        error-feedback residuals through the step signature.  All
+        explicit modes issue ONE loss collective per step (hoisted out
+        of the scan), not one per microbatch.
     The explicit modes require non-FSDP params (replicated over the batch
     axes); FSDP archs keep 'auto' (their grads are sharded, and GSPMD's
     reduce-scatter is already the hierarchy).
@@ -134,10 +240,13 @@ def make_train_step(model: Model, ocfg: OptimizerConfig,
 
     if explicit:
         from repro.comms import CommSpec, Communicator
-        spec = CommSpec.from_flag(grad_comms)
+        spec = (grad_comms if isinstance(grad_comms, CommSpec)
+                else CommSpec.from_flag(grad_comms))
         baxes = partition.mesh_batch_axes(mesh, cfg)
         comm = Communicator(mesh, spec, axes=baxes)
         overlap = spec.overlap and mb > 1
+        use_ef = (spec.compression is not None
+                  and spec.compression.error_feedback)
 
         def grad_pipeline(params, mbatches):
             """Loss + globally-summed grads over all microbatches; runs
@@ -183,11 +292,64 @@ def make_train_step(model: Model, ocfg: OptimizerConfig,
             grads = jax.tree.map(lambda g: g / (mb * comm.size), grads)
             return loss, grads
 
+        def grad_pipeline_ef(params, mbatches, ef):
+            """EF variant: the per-bucket residual rides the scan carry,
+            every exchange goes through :func:`bucketed_allreduce_ef`,
+            and the updated residual is returned alongside the grads
+            (still at raw gradient scale — normalization happens after
+            the exchange, so next step's residual matches next step's
+            raw buckets)."""
+            def take(i):
+                return jax.tree.map(lambda x: x[i], mbatches)
+
+            if overlap:
+                loss0, g0 = local_grad(params, take(0))
+
+                def mb_step(carry, mbatch):
+                    loss_acc, red_acc, pending, e = carry
+                    reduced, e = bucketed_allreduce_ef(comm, pending, e)
+                    loss, g = local_grad(params, mbatch)
+                    return (loss_acc + loss,
+                            acc_tree(red_acc, reduced), g, e), ()
+
+                rest = jax.tree.map(lambda x: x[1:], mbatches)
+                zeros = jax.tree.map(jnp.zeros_like, g0)
+                (loss_sum, red_acc, pending, ef), _ = lax.scan(
+                    mb_step, (loss0, zeros, g0, ef), rest)
+                last, ef = bucketed_allreduce_ef(comm, pending, ef)
+                grads = acc_tree(red_acc, last)
+            else:
+                def mb_step(carry, mbatch):
+                    loss_acc, grad_acc, e = carry
+                    loss, g = local_grad(params, mbatch)
+                    reduced, e = bucketed_allreduce_ef(comm, g, e)
+                    return (loss_acc + loss,
+                            acc_tree(grad_acc, reduced), e), ()
+
+                zeros = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params)
+                (loss_sum, grads, ef), _ = lax.scan(
+                    mb_step, (0.0, zeros, ef), mbatches)
+            loss = comm.allreduce(loss_sum) / (mb * comm.size)
+            grads = jax.tree.map(lambda g: g / (mb * comm.size), grads)
+            return loss, grads, ef
+
         batch_specs = {k: P(None, baxes, None) for k in ("tokens", "labels")}
         # manual over the batch axes; model/TP axes stay automatic
-        grad_all = comm.wrap(grad_pipeline, in_specs=(P(), batch_specs),
-                             out_specs=(P(), P()), manual_axes=comm.axes)
+        if use_ef:
+            ef_specs = tuple(P(tuple(baxes))
+                             for _ in ef_bucket_sizes(model))
+            grad_all = comm.wrap(
+                grad_pipeline_ef,
+                in_specs=(P(), batch_specs, ef_specs),
+                out_specs=(P(), P(), ef_specs), manual_axes=comm.axes)
+        else:
+            grad_all = comm.wrap(grad_pipeline,
+                                 in_specs=(P(), batch_specs),
+                                 out_specs=(P(), P()),
+                                 manual_axes=comm.axes)
     else:
+        use_ef = False
         def grad_all(params, mbatches):
             def mb_step(acc, mbatch):
                 loss_acc, grad_acc = acc
@@ -199,16 +361,26 @@ def make_train_step(model: Model, ocfg: OptimizerConfig,
             (loss_sum, grads), _ = lax.scan(mb_step, (0.0, zeros), mbatches)
             return loss_sum / mb, jax.tree.map(lambda g: g / mb, grads)
 
-    def train_step(params, opt_state, batch, step):
-        def reshape(x):
-            return x.reshape((mb, x.shape[0] // mb) + x.shape[1:])
+    def reshape(x):
+        return x.reshape((mb, x.shape[0] // mb) + x.shape[1:])
 
-        loss, grads = grad_all(params, jax.tree.map(reshape, batch))
-        grads, gnorm = clip_by_global_norm(grads, ocfg.clip_norm)
-        params, opt_state, lr = opt_update(ocfg, grads, opt_state, params,
-                                           step)
-        metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr}
-        return params, opt_state, metrics
+    if use_ef:
+        def train_step(params, opt_state, batch, step, ef):
+            loss, grads, ef = grad_all(params,
+                                       jax.tree.map(reshape, batch), ef)
+            grads, gnorm = clip_by_global_norm(grads, ocfg.clip_norm)
+            params, opt_state, lr = opt_update(ocfg, grads, opt_state,
+                                               params, step)
+            metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr}
+            return params, opt_state, metrics, ef
+    else:
+        def train_step(params, opt_state, batch, step):
+            loss, grads = grad_all(params, jax.tree.map(reshape, batch))
+            grads, gnorm = clip_by_global_norm(grads, ocfg.clip_norm)
+            params, opt_state, lr = opt_update(ocfg, grads, opt_state,
+                                               params, step)
+            metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr}
+            return params, opt_state, metrics
 
     return train_step, mb
 

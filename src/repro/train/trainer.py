@@ -87,13 +87,31 @@ class Trainer:
         step_fn, self.n_microbatches = steps_lib.make_train_step(
             self.model, self.ocfg, shape.global_batch,
             grad_comms=tcfg.grad_comms)
-        self.train_step = jax.jit(
-            step_fn,
-            in_shardings=(self.bundle["params"], self.bundle["opt"],
-                          self.bundle["input_shardings"],
-                          NamedSharding(mesh, P())),
-            out_shardings=(self.bundle["params"], self.bundle["opt"], None),
-            donate_argnums=(0, 1))
+        # error-feedback modes thread per-bucket residual state through
+        # the step; it is deliberately NOT checkpointed (restore resets
+        # it to zeros — one step of residual, benign)
+        self.uses_ef = steps_lib.flag_uses_ef(tcfg.grad_comms)
+        if self.uses_ef:
+            ef_sh = steps_lib.ef_shardings(self.model)
+            self.ef_state = steps_lib.ef_init(self.model)
+            self.train_step = jax.jit(
+                step_fn,
+                in_shardings=(self.bundle["params"], self.bundle["opt"],
+                              self.bundle["input_shardings"],
+                              NamedSharding(mesh, P()), ef_sh),
+                out_shardings=(self.bundle["params"], self.bundle["opt"],
+                               None, ef_sh),
+                donate_argnums=(0, 1, 4))
+        else:
+            self.ef_state = None
+            self.train_step = jax.jit(
+                step_fn,
+                in_shardings=(self.bundle["params"], self.bundle["opt"],
+                              self.bundle["input_shardings"],
+                              NamedSharding(mesh, P())),
+                out_shardings=(self.bundle["params"], self.bundle["opt"],
+                               None),
+                donate_argnums=(0, 1))
         self.checkpointer = ckpt_lib.AsyncCheckpointer(
             tcfg.ckpt_dir, keep_last=tcfg.keep_last)
         self.watchdog = StragglerWatchdog(tcfg.straggler_factor)
@@ -170,8 +188,15 @@ class Trainer:
                 t0 = time.time()
                 got_step, batch = prefetch.next()
                 assert got_step == step, (got_step, step)
-                params, opt_state, metrics = self.train_step(
-                    params, opt_state, batch, jnp.asarray(step, jnp.int32))
+                if self.uses_ef:
+                    params, opt_state, metrics, self.ef_state = (
+                        self.train_step(params, opt_state, batch,
+                                        jnp.asarray(step, jnp.int32),
+                                        self.ef_state))
+                else:
+                    params, opt_state, metrics = self.train_step(
+                        params, opt_state, batch,
+                        jnp.asarray(step, jnp.int32))
                 jax.block_until_ready(metrics["loss"])
                 dt = time.time() - t0
                 if self.first_step_done_at is None:

@@ -38,7 +38,7 @@ def test_registry_roundtrip_tiny_two_devices():
     assert "OK" in out
     for case in ("p2p", "agg", "bcast", "scatter", "grad_exchange",
                  "stream", "serving", "multipair", "bibw", "msgrate",
-                 "overlap", "redistribute", "recovery"):
+                 "overlap", "redistribute", "recovery", "compression"):
         assert case in out
 
 
@@ -48,7 +48,7 @@ def test_registry_metadata():
                                        "grad_exchange", "stream", "serving",
                                        "multipair", "bibw", "msgrate",
                                        "overlap", "redistribute",
-                                       "recovery"}
+                                       "recovery", "compression"}
     for c in cases:
         assert c.ndev >= 1 and c.figure and c.description
     with pytest.raises(ValueError):
@@ -87,7 +87,14 @@ def _doc(rows, **over):
 
 def test_validate_accepts_good_and_rejects_bad():
     results.validate(_doc([_row("a"), _row("b", measured=False)]))
+    # schema v2 rate fields: absent, null, or non-negative numbers
+    results.validate(_doc([_row("a", gbps=1.5, wire_gbps=0.4,
+                                effective_gbps=1.5)]))
     bad = [
+        _doc([_row("a", wire_gbps=-0.1)]),               # negative rate
+        _doc([_row("a", effective_gbps=True)]),          # bool is not a rate
+        _doc([_row("a", wire_gbps="fast")]),             # string rate
+        _doc([_row("a", gbps=-1.0)]),
         _doc([_row("a")], schema="nope"),
         _doc([_row("a")], schema_version=99),
         _doc([]),                                        # empty rows
@@ -196,7 +203,7 @@ def test_committed_baseline_is_schema_valid():
     cases = {r["case"] for r in doc["rows"]}
     assert {"p2p", "agg", "bcast", "scatter", "grad_exchange",
             "stream", "serving", "multipair", "bibw", "msgrate",
-            "overlap", "redistribute", "recovery"} <= cases
+            "overlap", "redistribute", "recovery", "compression"} <= cases
     # acceptance tie-in: the baseline's overlap rows must show a positive
     # recovered fraction on at least two transports, and the overlapped
     # full train step must not be slower than blocking beyond the gate
@@ -216,3 +223,25 @@ def test_committed_baseline_is_schema_valid():
     rel = (ovl - blk) / max(blk, 1e-9)
     assert rel <= compare.DEFAULT_THRESHOLD or \
         (ovl - blk) <= compare.DEFAULT_NOISE_FLOOR_US, (ovl, blk)
+    # compression acceptance: at the largest swept size, wire bytes must
+    # shrink >= 3.5x (int8/fp8) and >= 7x (int4) vs the logical float32
+    # payload, and the compressed exchange must be no slower than the
+    # uncompressed one on the same transport beyond the gate criterion
+    comp = [r for r in doc["rows"] if r["case"] == "compression"]
+    assert comp, "baseline is missing compression rows"
+    top = max(r["size_bytes"] for r in comp)
+    floors = {"int8": 3.5, "fp8": 3.5, "int4": 7.0}
+    for r in comp:
+        if r["size_bytes"] != top or r["name"].split("_")[2] == "none":
+            continue
+        dtype = r["name"].split("_")[2]
+        ratio = r["effective_gbps"] / r["wire_gbps"]
+        assert ratio >= floors[dtype], (r["name"], ratio)
+        base_row = next(b for b in comp
+                        if b["size_bytes"] == top
+                        and b["transport"] == r["transport"]
+                        and b["name"].split("_")[2] == "none")
+        d_us = r["median_us"] - base_row["median_us"]
+        rel = d_us / max(base_row["median_us"], 1e-9)
+        assert rel <= compare.DEFAULT_THRESHOLD or \
+            d_us <= compare.DEFAULT_NOISE_FLOOR_US, (r["name"], d_us)

@@ -20,8 +20,12 @@ sm = lambda f: shard_map(f, mesh=mesh, in_specs=(P(axes),),
 flat = sm(lambda a: jax.lax.psum(a, axes))(v)
 tree = sm(lambda a: coll.tree_allreduce_local(a, pod_axis=pod, in_axes=in_axes))(v)
 hier = sm(lambda a: coll.hier_allreduce_local(a, pod_axis=pod, in_axes=in_axes))(v)
-hier8 = sm(lambda a: coll.hier_allreduce_local(a, pod_axis=pod, in_axes=in_axes,
-                                               compress="int8"))(v)
+# int8 cross-pod wire compression is now a layer over the same schedule
+from repro.comms import compression as cx
+def hier8_body(a):
+    with cx.compressing(cx.LEGACY_INT8, (pod,) if pod else ()):
+        return coll.hier_allreduce_local(a, pod_axis=pod, in_axes=in_axes)
+hier8 = sm(hier8_body)(v)
 assert np.allclose(flat, tree), "tree != psum"
 assert np.allclose(flat, hier), "hier != psum"
 assert np.allclose(flat, hier8, rtol=0.02, atol=0.5), "hier int8 too lossy"

@@ -59,3 +59,105 @@ assert effective_microbatches(cfg_rep, 16, mesh3) == 2
 print("OK")
 """
     assert "OK" in run_py(code, ndev=8, timeout=560)
+
+
+# -------------------------------------------------- EF convergence tracking
+
+# shared harness: run N steps of the real microbatched train step on the
+# multi-pod mesh and return the per-step loss trajectory for one
+# grad-comms mode (string flag or explicit CommSpec)
+_CONV_HEADER = """
+import dataclasses
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.comms import CommSpec, CompressionSpec
+from repro.configs.base import ShapeSpec, get_config, reduced
+from repro.data.pipeline import DataConfig, SyntheticTokens
+from repro.launch.mesh import make_local_mesh
+from repro.models.model import Model
+from repro.optim.optimizer import OptimizerConfig, opt_init
+from repro.train import steps as steps_lib
+
+STEPS = 24
+cfg = reduced(get_config("h2o-danube-1.8b"), microbatches=2)
+mesh = make_local_mesh(2, 2, pod=2)
+model = Model(cfg, mesh)
+# short warmup + a real lr: the default 100-step warmup would keep early
+# updates tiny and hide any divergence inside numerical noise
+ocfg = OptimizerConfig(total_steps=30, warmup_steps=2, peak_lr=3e-3)
+shape = ShapeSpec("t", "train", 16, 32)
+bundle = steps_lib.sharding_bundle(model, ocfg, shape)
+data = SyntheticTokens(DataConfig(vocab_size=cfg.vocab_size, seq_len=16,
+                                  global_batch=32), mesh)
+batches = [data.device_batch(s) for s in range(STEPS)]
+
+def losses(mode):
+    step_fn, _ = steps_lib.make_train_step(model, ocfg, shape.global_batch,
+                                           grad_comms=mode)
+    use_ef = steps_lib.flag_uses_ef(mode)
+    shardings = (bundle["params"], bundle["opt"], bundle["input_shardings"],
+                 NamedSharding(mesh, P()))
+    if use_ef:
+        ef_sh = steps_lib.ef_shardings(model)
+        ef = steps_lib.ef_init(model)
+        f = jax.jit(step_fn, in_shardings=shardings + (ef_sh,),
+                    out_shardings=(bundle["params"], bundle["opt"], None,
+                                   ef_sh))
+    else:
+        f = jax.jit(step_fn, in_shardings=shardings,
+                    out_shardings=(bundle["params"], bundle["opt"], None))
+    params = jax.jit(model.init, out_shardings=bundle["params"])(
+        jax.random.PRNGKey(0))
+    opt = jax.jit(lambda p: opt_init(ocfg, p),
+                  out_shardings=bundle["opt"])(params)
+    out = []
+    for s in range(STEPS):
+        step = jnp.asarray(s, jnp.int32)
+        if use_ef:
+            params, opt, m, ef = f(params, opt, batches[s], step, ef)
+        else:
+            params, opt, m = f(params, opt, batches[s], step)
+        out.append(float(m["loss"]))
+    return np.asarray(out)
+
+auto = losses("auto")
+"""
+
+
+def test_ef_modes_track_exact_loss():
+    """Every ``*_ef`` grad-comms mode must track the exact (GSPMD)
+    trajectory within its recorded tolerance over >= 20 steps.  The
+    bounds are ~4-50x the empirically recorded deviations (int8/fp8
+    recorded <= 5e-3, int4 <= 2.4e-2 on this pinned setup), so they
+    catch regressions to lossy-without-feedback behavior, not noise."""
+    code = _CONV_HEADER + """
+TOLS = {"tree_int8_ef": 0.02, "tree_fp8_ef": 0.02, "tree_int4_ef": 0.05,
+        "hier_int8_ef": 0.02, "hier_fp8_ef": 0.02, "hier_int4_ef": 0.05}
+for mode, tol in TOLS.items():
+    dev = float(np.mean(np.abs(losses(mode) - auto)))
+    assert dev <= tol, (mode, dev, tol)
+    print(mode, round(dev, 5))
+print("OK")
+"""
+    assert "OK" in run_py(code, ndev=8, timeout=560)
+
+
+def test_error_feedback_beats_plain_quantization():
+    """The load-bearing EF property: under aggressive compression
+    (per-tensor int4 on EVERY leg), error feedback keeps the trajectory
+    near exact while the same spec without feedback drifts past it —
+    the threshold sits between the two recorded means (0.091 vs 0.144)."""
+    code = _CONV_HEADER + """
+base = CommSpec.from_flag("tree")
+devs = {}
+for ef in (True, False):
+    cs = dataclasses.replace(base, compression=CompressionSpec(
+        dtype="int4", block=None, scope="all", error_feedback=ef))
+    devs[ef] = float(np.mean(np.abs(losses(cs) - auto)))
+print("ef", round(devs[True], 5), "plain", round(devs[False], 5))
+assert devs[True] < 0.115, devs
+assert devs[False] > 0.115, devs
+assert devs[True] < devs[False], devs
+print("OK")
+"""
+    assert "OK" in run_py(code, ndev=8, timeout=560)
